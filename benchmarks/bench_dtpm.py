@@ -1,0 +1,30 @@
+"""Paper §2 DTPM capability: energy/latency trade-off across DVFS governors
+(the power/thermal exploration the framework exists to enable)."""
+import time
+
+import numpy as np
+
+from repro.core import (get_governor, get_scheduler, make_soc_table2,
+                        poisson_trace, simulate, thermal, wifi_tx)
+
+
+def run():
+    db = make_soc_table2()
+    app = wifi_tx()
+    trace = poisson_trace(20.0, 150, ["wifi_tx"], seed=0)
+    rows = []
+    for gov in ["performance", "powersave", "ondemand"]:
+        res = simulate(db, [app], trace, get_scheduler("etf"),
+                       get_governor(gov))
+        rows.append((f"dtpm/{gov}/latency", res.avg_job_latency_us,
+                     "avg_job_latency_us"))
+        rows.append((f"dtpm/{gov}/energy", res.energy.total_energy_mj,
+                     "total_mj"))
+        rows.append((f"dtpm/{gov}/power", res.energy.avg_power_w, "avg_W"))
+        # steady-state temperature at this governor's average power split
+        p = np.array([res.energy.avg_power_w * 0.6,
+                      res.energy.avg_power_w * 0.2,
+                      res.energy.avg_power_w * 0.2])
+        rows.append((f"dtpm/{gov}/t_steady", thermal.steady_state(p)[0],
+                     "big_cluster_C"))
+    return rows

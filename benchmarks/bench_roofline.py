@@ -1,0 +1,34 @@
+"""Roofline terms per (arch × shape) from the dry-run artifacts (§Roofline).
+
+Requires ``experiments/dryrun/*.json`` (run ``python -m repro.launch.dryrun
+--all --both-meshes`` first); cells without artifacts are reported as absent.
+"""
+from repro.configs import ARCHITECTURES, SHAPES
+from repro.launch.roofline import cell_terms, load_cell
+
+
+def run():
+    rows = []
+    missing = 0
+    for arch in sorted(ARCHITECTURES):
+        for shape in sorted(SHAPES):
+            rec = load_cell(arch, shape, "pod16x16")
+            if rec is None:
+                missing += 1
+                continue
+            if not rec.get("runnable"):
+                rows.append((f"roofline/{arch}/{shape}", 0.0, "skipped"))
+                continue
+            t = cell_terms(rec)
+            if t is None:
+                continue
+            step_us = max(t["t_compute"], t["t_memory"],
+                          t["t_collective"]) * 1e6
+            rows.append((f"roofline/{arch}/{shape}", step_us,
+                         f"dom={t['dominant']}"
+                         f";comp={t['t_compute']:.2e}s"
+                         f";mem={t['t_memory']:.2e}s"
+                         f";coll={t['t_collective']:.2e}s"
+                         f";useful={t['model_flops_frac']:.2f}"))
+    rows.append(("roofline/missing_cells", float(missing), "run_dryrun_first"))
+    return rows

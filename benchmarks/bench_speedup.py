@@ -1,0 +1,49 @@
+"""Simulation-speed benchmark — the paper's '600× over gem5' story, redone
+for accelerators: one event-heap simulation vs the vectorised JAX kernel
+batched over a whole design-space sweep (seeds × injection rates)."""
+import time
+
+import numpy as np
+
+from repro.core import (build_tables, get_scheduler, make_soc_table2,
+                        poisson_trace, simulate, simulate_batch, wifi_tx)
+
+NUM_JOBS = 80
+BATCH = 64          # design points evaluated at once by the JAX kernel
+
+
+def run():
+    db = make_soc_table2()
+    app = wifi_tx()
+    traces = [poisson_trace(5.0 + 70.0 * i / BATCH, NUM_JOBS, ["wifi_tx"],
+                            seed=i) for i in range(BATCH)]
+
+    # reference event-heap kernel, one by one
+    t0 = time.perf_counter()
+    ref_lat = [simulate(db, [app], t, get_scheduler("etf")).avg_job_latency_us
+               for t in traces]
+    t_ref = time.perf_counter() - t0
+
+    # vectorised kernel: one batched tensor program
+    tables = build_tables(db, [app])
+    arr = np.stack([t.arrival_us for t in traces])
+    idx = np.stack([t.app_index for t in traces])
+    out = simulate_batch(tables, "etf", arr, idx)        # includes jit compile
+    out["avg_job_latency_us"].block_until_ready()
+    t0 = time.perf_counter()
+    out = simulate_batch(tables, "etf", arr, idx)
+    out["avg_job_latency_us"].block_until_ready()
+    t_jax = time.perf_counter() - t0
+
+    agree = np.allclose(np.asarray(out["avg_job_latency_us"]),
+                        np.asarray(ref_lat), rtol=1e-3)
+    per_sim_ref = t_ref / BATCH * 1e6
+    per_sim_jax = t_jax / BATCH * 1e6
+    return [
+        ("speedup/ref_kernel", per_sim_ref, "us_per_simulation"),
+        ("speedup/jax_kernel_batched", per_sim_jax, "us_per_simulation"),
+        ("speedup/jax_over_ref", per_sim_ref / per_sim_jax,
+         f"x_speedup(batch={BATCH},agree={agree})"),
+        ("speedup/events_per_sec",
+         BATCH * NUM_JOBS * app.num_tasks / t_jax, "scheduled_tasks_per_s"),
+    ]

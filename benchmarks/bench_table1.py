@@ -1,0 +1,21 @@
+"""Paper Table 1: WiFi-TX execution profiles on A7/A15/accelerators."""
+import time
+
+from repro.core import make_soc_table2, wifi_tx
+from repro.core.resources import ACC_FFT, ACC_SCRAMBLER, CPU_BIG, CPU_LITTLE
+
+
+def run():
+    db = make_soc_table2()
+    app = wifi_tx()
+    rows = []
+    t0 = time.perf_counter()
+    for task in app.tasks:
+        prof = db.profiles[task.name]
+        rows.append((f"table1/{task.name}",
+                     prof.get(CPU_LITTLE, float("nan")),
+                     f"A15={prof.get(CPU_BIG)}us"
+                     f" ACC={prof.get(ACC_SCRAMBLER, prof.get(ACC_FFT, '-'))}"))
+    dt = (time.perf_counter() - t0) * 1e6
+    rows.append(("table1/lookup_total", dt, f"{len(app.tasks)}tasks"))
+    return rows

@@ -1,0 +1,29 @@
+"""Benchmark harness — one module per paper table/figure + the pod-scale
+roofline.  Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import bench_table1, bench_fig3, bench_speedup, bench_dtpm, \
+        bench_roofline
+    print("name,us_per_call,derived")
+    ok = True
+    for mod in (bench_table1, bench_fig3, bench_speedup, bench_dtpm,
+                bench_roofline):
+        try:
+            for name, val, derived in mod.run():
+                print(f"{name},{val:.4f},{derived}")
+        except Exception:                                  # noqa: BLE001
+            ok = False
+            print(f"{mod.__name__},nan,FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""DVFS governors (paper §2: "built-in DVFS governors deployed on commercial
+SoCs") — performance, powersave, userspace, ondemand.
+
+A governor controls the frequency of each CPU *cluster* (accelerators run at
+fixed clocks).  ``ondemand`` mirrors the Linux governor: sample utilisation
+over a window; if it exceeds ``up_threshold`` jump to f_max, otherwise step
+down proportionally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from .resources import CPU_BIG, CPU_LITTLE, NOMINAL_FREQ, OPP_TABLE, ResourceDB
+
+
+class Governor:
+    name = "base"
+
+    def initial_freq(self, pe_type: str) -> float:
+        raise NotImplementedError
+
+    def update(self, pe_type: str, cur_freq: float, utilization: float) -> float:
+        """Return the new cluster frequency given window utilisation in [0,1]."""
+        return cur_freq
+
+
+class PerformanceGovernor(Governor):
+    name = "performance"
+
+    def initial_freq(self, pe_type: str) -> float:
+        return OPP_TABLE[pe_type][-1][0]
+
+
+class PowersaveGovernor(Governor):
+    name = "powersave"
+
+    def initial_freq(self, pe_type: str) -> float:
+        return OPP_TABLE[pe_type][0][0]
+
+
+class UserspaceGovernor(Governor):
+    name = "userspace"
+
+    def __init__(self, freq_ghz: Dict[str, float] | float = 1.0):
+        self._freq = freq_ghz
+
+    def initial_freq(self, pe_type: str) -> float:
+        if isinstance(self._freq, dict):
+            return self._freq[pe_type]
+        return float(self._freq)
+
+
+class OndemandGovernor(Governor):
+    """Linux-style ondemand: sampling window + up-threshold."""
+    name = "ondemand"
+
+    def __init__(self, up_threshold: float = 0.80, sample_window_us: float = 50.0):
+        self.up_threshold = up_threshold
+        self.sample_window_us = sample_window_us
+
+    def initial_freq(self, pe_type: str) -> float:
+        return OPP_TABLE[pe_type][0][0]
+
+    def update(self, pe_type: str, cur_freq: float, utilization: float) -> float:
+        opps = [f for f, _ in OPP_TABLE[pe_type]]
+        if utilization > self.up_threshold:
+            return opps[-1]
+        # proportional step-down: target = fmax * util / up_threshold
+        target = opps[-1] * max(utilization, 0.0) / self.up_threshold
+        for f in opps:
+            if f >= target - 1e-9:
+                return f
+        return opps[-1]
+
+
+GOVERNORS = {
+    "performance": PerformanceGovernor,
+    "powersave": PowersaveGovernor,
+    "userspace": UserspaceGovernor,
+    "ondemand": OndemandGovernor,
+}
+
+
+def get_governor(name: str, **kw) -> Governor:
+    try:
+        return GOVERNORS[name](**kw)
+    except KeyError:
+        raise KeyError(f"unknown governor {name!r}; have {sorted(GOVERNORS)}")

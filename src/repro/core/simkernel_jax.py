@@ -1,0 +1,254 @@
+"""Vectorised JAX simulation kernel — batched design-space exploration.
+
+The paper's speed story (system-level simulation ~600× faster than cycle
+accurate gem5) is re-thought for accelerators: instead of making *one*
+event-heap simulation fast, the whole simulator becomes a fixed-shape tensor
+program (``lax.fori_loop`` over decision epochs + masked argmin selects) so
+that **thousands of simulations — seeds × injection rates × SoC configs ×
+schedulers — run batched under ``vmap``/``jit``**.
+
+Semantics are identical to ``simkernel_ref`` (same epoch ordering, same
+tie-breaking, float32 arithmetic): the two kernels are cross-validated in
+``tests/test_sim_equivalence.py``.
+
+Supported here: MET / ETF / table schedulers and *static* DVFS governors
+(performance / powersave / userspace).  The window-sampled ondemand governor
+needs data-dependent re-profiling and lives in the reference kernel only
+(see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .applications import Application
+from .dvfs import Governor, PerformanceGovernor
+from .power import active_power, idle_power
+from .resources import NOMINAL_FREQ, ResourceDB
+
+BIG = jnp.float32(1e30)
+
+
+# --------------------------------------------------------------------------
+# Static tables (device-resident constants per (db, apps, governor) triple)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SimTables:
+    exec_us: jnp.ndarray        # (A, T, P) f32 — DVFS-scaled latency, BIG=unsupported
+    exec_raw: jnp.ndarray       # (A, T, P) f32 — unscaled (MET uses raw, like ref)
+    pred: jnp.ndarray           # (A, T, T) bool
+    ebytes: jnp.ndarray         # (A, T, T) f32 (bytes flowing t' -> t)
+    valid: jnp.ndarray          # (A, T) bool
+    comm_mult: jnp.ndarray      # (P, P) f32 in {0,1,penalty}
+    comm_startup: jnp.ndarray   # () f32
+    comm_inv_bw: jnp.ndarray    # () f32
+    power_active: jnp.ndarray   # (P,) f32  W while busy
+    power_idle: jnp.ndarray     # (P,) f32  W while idle
+    table_pe: jnp.ndarray       # (A, T) i32 — table-scheduler assignment (or -1)
+    t_max: int
+    num_pes: int
+
+
+jax.tree_util.register_dataclass(
+    SimTables,
+    data_fields=["exec_us", "exec_raw", "pred", "ebytes", "valid", "comm_mult",
+                 "comm_startup", "comm_inv_bw", "power_active", "power_idle",
+                 "table_pe"],
+    meta_fields=["t_max", "num_pes"],
+)
+
+
+def build_tables(db: ResourceDB, apps: Sequence[Application],
+                 governor: Optional[Governor] = None,
+                 table: Optional[Dict[Tuple[str, int], int]] = None) -> SimTables:
+    governor = governor or PerformanceGovernor()
+    A = len(apps)
+    T = max(a.num_tasks for a in apps)
+    P = db.num_pes
+
+    freq = {}
+    for pe in db.pes:
+        if pe.is_cpu and pe.cluster not in freq:
+            freq[pe.cluster] = governor.initial_freq(pe.pe_type)
+
+    exec_us = np.full((A, T, P), 1e30, dtype=np.float32)
+    exec_raw = np.full((A, T, P), 1e30, dtype=np.float32)
+    pred = np.zeros((A, T, T), dtype=bool)
+    ebytes = np.zeros((A, T, T), dtype=np.float32)
+    valid = np.zeros((A, T), dtype=bool)
+    table_pe = np.full((A, T), -1, dtype=np.int32)
+
+    for ai, app in enumerate(apps):
+        lat = db.latency_matrix(app.task_names)      # (t, P), inf unsupported
+        for t in range(app.num_tasks):
+            valid[ai, t] = True
+            for j, pe in enumerate(db.pes):
+                base = lat[t, j]
+                if np.isfinite(base):
+                    exec_raw[ai, t, j] = np.float32(base)
+                    scale = (NOMINAL_FREQ[pe.pe_type] / freq[pe.cluster]
+                             if pe.is_cpu else 1.0)
+                    exec_us[ai, t, j] = np.float32(np.float32(base) * np.float32(scale))
+            if table is not None:
+                table_pe[ai, t] = table.get((app.name, t), -1)
+        pred[ai, :app.num_tasks, :app.num_tasks] = app.pred_matrix()
+        ebytes[ai, :app.num_tasks, :app.num_tasks] = app.edge_bytes_matrix()
+
+    comm_mult = np.zeros((P, P), dtype=np.float32)
+    for s in range(P):
+        for d in range(P):
+            if s == d:
+                continue
+            comm_mult[s, d] = (db.comm.cross_cluster_penalty
+                               if db.pes[s].cluster != db.pes[d].cluster else 1.0)
+
+    p_act = np.zeros(P, dtype=np.float32)
+    p_idle = np.zeros(P, dtype=np.float32)
+    for j, pe in enumerate(db.pes):
+        f = freq.get(pe.cluster, 0.0) if pe.is_cpu else 0.0
+        p_act[j] = active_power(pe, f)
+        p_idle[j] = idle_power(pe)
+
+    return SimTables(
+        exec_us=jnp.asarray(exec_us), exec_raw=jnp.asarray(exec_raw),
+        pred=jnp.asarray(pred), ebytes=jnp.asarray(ebytes),
+        valid=jnp.asarray(valid),
+        comm_mult=jnp.asarray(comm_mult),
+        comm_startup=jnp.float32(db.comm.startup_us),
+        comm_inv_bw=jnp.float32(1.0 / db.comm.bw_bytes_per_us),
+        power_active=jnp.asarray(p_act), power_idle=jnp.asarray(p_idle),
+        table_pe=jnp.asarray(table_pe), t_max=T, num_pes=P)
+
+
+# --------------------------------------------------------------------------
+# The simulation kernel
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("policy", "num_jobs"))
+def _simulate(tables: SimTables, policy: str, num_jobs: int,
+              arrival: jnp.ndarray, app_idx: jnp.ndarray):
+    T, P = tables.t_max, tables.num_pes
+    J = num_jobs
+
+    pred_j = tables.pred[app_idx]          # (J, T, T)
+    ebytes_j = tables.ebytes[app_idx]      # (J, T, T)
+    valid_j = tables.valid[app_idx]        # (J, T)
+    exec_j = tables.exec_us[app_idx]       # (J, T, P)
+    exec_raw_j = tables.exec_raw[app_idx]  # (J, T, P)
+    table_j = tables.table_pe[app_idx]     # (J, T)
+
+    total = J * T  # static iteration bound: one commit per real task
+
+    state = dict(
+        scheduled=~valid_j,                              # invalid = pre-done
+        finish=jnp.zeros((J, T), jnp.float32),
+        start=jnp.zeros((J, T), jnp.float32),
+        onpe=jnp.zeros((J, T), jnp.int32),
+        pe_free=jnp.zeros((P,), jnp.float32),
+    )
+
+    job_ids = jnp.arange(J, dtype=jnp.int32)
+    flat_order = (jnp.arange(J, dtype=jnp.int32)[:, None] * T
+                  + jnp.arange(T, dtype=jnp.int32)[None, :])      # (J, T)
+
+    def body(_, st):
+        scheduled, finish = st["scheduled"], st["finish"]
+        # 1. eligibility: job tasks whose preds are all committed
+        preds_open = jnp.any(pred_j & ~scheduled[:, None, :], axis=-1)   # (J, T)
+        eligible = (~scheduled) & (~preds_open)
+        # 2. epoch time (no comm): max(arrival, max pred finish)
+        pf = jnp.where(pred_j, finish[:, None, :], -BIG)                  # (J,T,T)
+        ready = jnp.maximum(arrival[:, None], jnp.max(pf, axis=-1))      # (J, T)
+        ready = jnp.where(eligible, ready, BIG)
+        # 3. lexicographic argmin (ready, job, task)
+        rmin = jnp.min(ready)
+        tie = eligible & (ready <= rmin)
+        pick = jnp.min(jnp.where(tie, flat_order, jnp.int32(2**30)))
+        j, t = pick // T, pick % T
+        any_left = rmin < BIG * 0.5
+
+        # 4. per-PE data-ready with comm from producer PEs
+        onpe_row = st["onpe"][j]                                        # (T,)
+        mult = tables.comm_mult[onpe_row]                               # (T, P)
+        base = tables.comm_startup + ebytes_j[j, t] * tables.comm_inv_bw  # (T,)
+        comm = mult * base[:, None]                                     # (T, P)
+        pf_row = jnp.where(pred_j[j, t], finish[j], -BIG)               # (T,)
+        data_ready = jnp.maximum(
+            rmin, jnp.max(pf_row[:, None] + comm, axis=0))              # (P,)
+        start_c = jnp.maximum(data_ready, st["pe_free"])                # (P,)
+        fin_c = start_c + exec_j[j, t]                                  # (P,)
+
+        # 5. policy
+        if policy == "etf":
+            pe = jnp.argmin(fin_c).astype(jnp.int32)
+        elif policy == "met":
+            # canonical MET: min execution time, availability ignored
+            ex = exec_j[j, t]   # DVFS-scaled, matching the reference scheduler
+            pe = jnp.argmin(ex).astype(jnp.int32)
+        elif policy == "table":
+            pe = table_j[j, t]
+        else:
+            raise ValueError(f"unknown policy {policy!r}")
+
+        # 6. commit (no-op when nothing eligible — padding iterations)
+        s0 = jnp.maximum(data_ready[pe], st["pe_free"][pe])
+        f0 = s0 + exec_j[j, t, pe]
+
+        def commit(st):
+            return dict(
+                scheduled=st["scheduled"].at[j, t].set(True),
+                finish=st["finish"].at[j, t].set(f0),
+                start=st["start"].at[j, t].set(s0),
+                onpe=st["onpe"].at[j, t].set(pe),
+                pe_free=st["pe_free"].at[pe].set(f0),
+            )
+
+        return jax.lax.cond(any_left, commit, lambda s: s, st)
+
+    st = jax.lax.fori_loop(0, total, body, state)
+
+    busy = st["finish"] - st["start"]                                   # (J, T)
+    makespan = jnp.max(jnp.where(valid_j, st["finish"], 0.0))
+    job_finish = jnp.max(jnp.where(valid_j, st["finish"], 0.0), axis=1)
+    avg_latency = jnp.mean(job_finish - arrival)
+    # energy: active while busy + idle leakage elsewhere  (uJ = W * us)
+    e_active = jnp.sum(
+        jnp.where(valid_j, busy, 0.0)[..., None]
+        * (jax.nn.one_hot(st["onpe"], tables.num_pes, dtype=jnp.float32)
+           * jnp.where(valid_j, 1.0, 0.0)[..., None])
+        * tables.power_active[None, None, :])
+    busy_per_pe = jnp.sum(
+        jnp.where(valid_j, busy, 0.0)[..., None]
+        * jax.nn.one_hot(st["onpe"], tables.num_pes, dtype=jnp.float32)
+        * jnp.where(valid_j, 1.0, 0.0)[..., None], axis=(0, 1))
+    e_idle = jnp.sum(tables.power_idle * jnp.maximum(makespan - busy_per_pe, 0.0))
+    energy_mj = (e_active + e_idle) * 1e-6
+
+    return dict(
+        finish=st["finish"], start=st["start"], onpe=st["onpe"],
+        scheduled=st["scheduled"], job_finish=job_finish,
+        makespan_us=makespan, avg_job_latency_us=avg_latency,
+        energy_mj=energy_mj, busy_per_pe_us=busy_per_pe,
+    )
+
+
+def simulate_jax(tables: SimTables, policy: str, arrival: np.ndarray,
+                 app_idx: np.ndarray):
+    """Single simulation.  ``arrival``: (J,) f32; ``app_idx``: (J,) i32."""
+    return _simulate(tables, policy, int(arrival.shape[0]),
+                     jnp.asarray(arrival, jnp.float32),
+                     jnp.asarray(app_idx, jnp.int32))
+
+
+def simulate_batch(tables: SimTables, policy: str, arrival: np.ndarray,
+                   app_idx: np.ndarray):
+    """Batched simulation: ``arrival``/(B, J), ``app_idx``/(B, J) — one design
+    point per row (seed × rate × mix).  Runs as ONE vmapped tensor program."""
+    fn = jax.vmap(lambda a, i: _simulate(tables, policy, int(arrival.shape[1]), a, i))
+    return fn(jnp.asarray(arrival, jnp.float32), jnp.asarray(app_idx, jnp.int32))

@@ -1,0 +1,61 @@
+"""Lumped RC thermal model (paper §2 — temperature exploration for DTPM).
+
+A small thermal network: one node per cluster (big, LITTLE, accelerator
+fabric) plus a board node coupled to ambient.  Forward-Euler integration:
+
+    C_i · dT_i/dt = P_i − (T_i − T_board)/R_i
+    C_b · dT_b/dt = Σ_i (T_i − T_board)/R_i − (T_b − T_amb)/R_b
+
+Constants are in the calibrated range for an Odroid-XU3 class board.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+T_AMBIENT_C = 25.0
+
+# node order: [big cluster, LITTLE cluster, accel fabric, board]
+R_TO_BOARD = np.array([2.0, 4.0, 3.0], dtype=np.float64)     # K/W
+C_NODE = np.array([0.15, 0.05, 0.10], dtype=np.float64)      # J/K
+R_BOARD_AMB = 1.5                                            # K/W
+C_BOARD = 20.0                                               # J/K
+
+
+@dataclasses.dataclass
+class ThermalState:
+    t_node_c: np.ndarray     # (3,) cluster temperatures
+    t_board_c: float
+
+    @classmethod
+    def ambient(cls) -> "ThermalState":
+        return cls(np.full(3, T_AMBIENT_C), T_AMBIENT_C)
+
+
+def step(state: ThermalState, power_w: np.ndarray, dt_s: float) -> ThermalState:
+    """One forward-Euler step.  ``power_w``: (3,) per-cluster power."""
+    flow = (state.t_node_c - state.t_board_c) / R_TO_BOARD
+    t_node = state.t_node_c + dt_s / C_NODE * (power_w - flow)
+    t_board = state.t_board_c + dt_s / C_BOARD * (
+        flow.sum() - (state.t_board_c - T_AMBIENT_C) / R_BOARD_AMB)
+    return ThermalState(t_node, float(t_board))
+
+
+def simulate_trace(power_trace_w: np.ndarray, dt_s: float,
+                   init: ThermalState | None = None) -> np.ndarray:
+    """Integrate a (steps × 3) cluster power trace; returns (steps × 4) temps."""
+    st = init or ThermalState.ambient()
+    out = np.zeros((power_trace_w.shape[0], 4), dtype=np.float64)
+    for i in range(power_trace_w.shape[0]):
+        st = step(st, power_trace_w[i], dt_s)
+        out[i, :3] = st.t_node_c
+        out[i, 3] = st.t_board_c
+    return out
+
+
+def steady_state(power_w: np.ndarray) -> np.ndarray:
+    """Analytical steady-state temps for constant cluster power (sanity oracle)."""
+    tb = T_AMBIENT_C + R_BOARD_AMB * float(power_w.sum())
+    return np.concatenate([tb + R_TO_BOARD * power_w, [tb]])

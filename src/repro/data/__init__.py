@@ -1,0 +1,3 @@
+from .pipeline import DataState, SyntheticLMPipeline
+
+__all__ = ["DataState", "SyntheticLMPipeline"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three pieces:
+  * ``<name>.py`` — the ``pl.pallas_call`` kernel with explicit BlockSpec
+    VMEM tiling (TPU target; validated with interpret=True on CPU);
+  * ``ops.py``    — the jitted public wrapper the model code calls;
+  * ``ref.py``    — the pure-jnp oracle it is tested against.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,91 @@
+"""Flash-decode (TPU Pallas): one query token against a long KV cache.
+
+Decode attention is pure HBM bandwidth: the kernel streams KV blocks through
+VMEM once, keeping the online-softmax state (m, l, acc) in scratch.  The
+``valid`` mask handles both full caches (slots ≤ pos) and ring buffers
+(sliding-window slot validity) — masking is computed on the host side once
+per step and streamed as an i32 vector.
+
+Grid (B, H, L/bk), KV block innermost; GQA via ``h // groups`` index map.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, scale: float,
+                   softcap: Optional[float]):
+    jk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                    # (bk, d)
+    ok = valid_ref[0] != 0                                 # (bk,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (1, bk)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.where(ok[None, :], jnp.exp(s - m_cur[:, None]), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_ref[...] = m_cur
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_bhd(q, k, v, valid, *, scale: float,
+                         softcap: Optional[float] = None,
+                         block_k: int = 512, interpret: bool = False):
+    """q: (B,H,1,Dh); k,v: (B,KV,L,Dh); valid: (B,L) bool -> (B,H,1,Dh)."""
+    B, H, _, Dh = q.shape
+    KV, L = k.shape[1], k.shape[2]
+    g = H // KV
+    bk = min(block_k, L)
+    assert L % bk == 0, (L, bk)
+    grid = (B, H, L // bk)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Dh), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, Dh), lambda b, h, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, Dh), lambda b, h, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Dh), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, Dh), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, valid.astype(jnp.int32))

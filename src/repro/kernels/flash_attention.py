@@ -1,0 +1,115 @@
+"""Flash attention (TPU Pallas): tiled online-softmax, O(S) memory.
+
+Grid (B, H, Sq/bq, Sk/bk) — the K dim is innermost so the running
+(max, denom, accumulator) state lives in VMEM scratch across K blocks and the
+output tile is written once at the last K block.  GQA reads the KV head via
+``h // groups`` in the BlockSpec index map (no repeated-KV materialisation).
+Causal/sliding-window masks skip fully-masked K blocks (predicated compute).
+
+Block sizes default to (128, 128): MXU-aligned in the lane dim and a
+(bq + 2·bk) × Dh ≤ 128·4·256·4B ≈ 0.5 MB VMEM working set at Dh=256.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: Optional[float], block_q: int, block_k: int,
+                  seq_k: int):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = jk * block_k
+    rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(run, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_ref[...] = m_cur
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool, window: Optional[int],
+                         softcap: Optional[float], scale: float,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = False):
+    """q: (B,H,Sq,Dh); k,v: (B,KV,Sk,Dh) -> (B,H,Sq,Dh)."""
+    B, H, Sq, Dh = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    g = H // KV
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    grid = (B, H, Sq // bq, Sk // bk)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=bq, block_k=bk, seq_k=Sk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, Dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, Dh), lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, Dh), lambda b, h, i, j: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, Dh), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, Dh), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,79 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in ``interpret=True`` mode — the
+kernel body runs as plain JAX ops for correctness validation; on TPU the same
+``pallas_call`` lowers to Mosaic.  Model code calls these via
+``cfg.attn_impl == "pallas"``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import rg_lru as _lru
+from . import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None, scale: float = 1.0,
+                    block_q: int = 128, block_k: int = 128):
+    """q: (B,Sq,H,Dh); k,v: (B,Sk,KV,Dh) -> (B,Sq,H,Dh)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = _fa.flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                                   softcap=softcap, scale=scale,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+def decode_attention(q, k, v, valid, *, softcap: Optional[float] = None,
+                     scale: float = 1.0, block_k: int = 512):
+    """q: (B,1,H,Dh); k,v: (B,L,KV,Dh); valid: (L,) or (B,L) -> (B,1,H,Dh)."""
+    if valid.ndim == 1:
+        valid = jnp.broadcast_to(valid[None, :], (q.shape[0], valid.shape[0]))
+    qt = q.transpose(0, 2, 1, 3)                     # (B,H,1,Dh)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = _dec.decode_attention_bhd(qt, kt, vt, valid, scale=scale,
+                                    softcap=softcap, block_k=block_k,
+                                    interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+def ssd_scan(xc, dtc, dA, cs, Bc, Cc, h0=None):
+    """Adapter matching ``repro.models.ssm.ssd_chunked``'s kernel call.
+
+    xc: (B,nc,c,H,P); dtc/cs: (B,nc,c,H); Bc,Cc: (B,nc,c,N).
+    Returns (y: (B, L, H, P), h_last: (B,H,P,N)).
+    """
+    assert h0 is None, "prefill state chaining uses the jnp path"
+    B, nc, c, H, P = xc.shape
+    x = xc.transpose(0, 3, 1, 2, 4)                  # (B,H,nc,c,P)
+    # fold dt into the kernel inputs: kernel consumes dt & cs per (b,h,z)
+    dt = dtc.transpose(0, 3, 1, 2)                   # (B,H,nc,c)
+    cseq = cs.transpose(0, 3, 1, 2)                  # (B,H,nc,c)
+    y, hlast = _ssd.ssd_scan_bhzc(x, dt, cseq, Bc, Cc,
+                                  interpret=_interpret())
+    L = nc * c
+    yout = y.transpose(0, 2, 3, 1, 4).reshape(B, L, H, P)
+    return yout, hlast
+
+
+def rg_lru(a, x, h0=None, *, block_w: int = 512, block_s: int = 128):
+    """a, x: (B,S,W) f32 -> hidden trajectory (B,S,W) f32."""
+    if h0 is not None:
+        x = x.at[:, 0, :].add(a[:, 0, :] * h0)
+    return _lru.rg_lru_bsw(a, x, block_w=block_w, block_s=block_s,
+                           interpret=_interpret())

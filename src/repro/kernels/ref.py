@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: float = 1.0):
+    """q: (B,Sq,H,Dh); k,v: (B,Sk,KV,Dh) -> (B,Sq,H,Dh).  Full softmax."""
+    B, Sq, H, Dh = q.shape
+    KV, Sk = k.shape[2], k.shape[1]
+    g = H // KV
+    qg = q.reshape(B, Sq, KV, g, Dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    rows = jnp.arange(Sq)[:, None]
+    cols = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, valid, *, softcap: Optional[float] = None,
+                         scale: float = 1.0):
+    """q: (B,1,H,Dh); k,v: (B,L,KV,Dh); valid: (L,) or (B,L) -> (B,1,H,Dh)."""
+    B, _, H, Dh = q.shape
+    KV, L = k.shape[2], k.shape[1]
+    g = H // KV
+    if valid.ndim == 1:
+        valid = jnp.broadcast_to(valid[None, :], (B, L))
+    qg = q.reshape(B, 1, KV, g, Dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Naive sequential SSM recurrence (the SSD ground truth).
+
+    x: (B,L,H,P); dt: (B,L,H) f32; A: (H,); Bm,Cm: (B,L,N).
+    h_t = h_{t-1}·exp(A·dt_t) + dt_t·x_t⊗B_t ;  y_t = h_t·C_t
+    Returns (y: (B,L,H,P), h_last: (B,H,P,N)) in f32.
+    """
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                       # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt * A)                    # (B,H)
+        upd = dtt[..., None, None] * xt[..., None] * bt[:, None, None, :]
+        h = h * decay[..., None, None] + upd        # (B,H,P,N)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_last, ys = jax.lax.scan(
+        step, h0,
+        (xf.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+         Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3), h_last
+
+
+def rg_lru_ref(a, x):
+    """Sequential reference for h_t = a_t·h_{t-1} + x_t.  a,x: (B,S,W) f32."""
+    def step(h, inp):
+        at, xt = inp
+        h = at * h + xt
+        return h, h
+
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), x.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

@@ -1,0 +1,63 @@
+"""RG-LRU linear recurrence (TPU Pallas).
+
+h_t = a_t ⊙ h_{t-1} + x_t, evaluated as a sequential in-VMEM scan — the same
+design as the official RecurrentGemma TPU kernel: the recurrence is memory
+bound, so the win is streaming (a, x) tiles through VMEM once while the
+hidden state stays resident in scratch; the time loop is a VPU fori_loop over
+rows of the tile.
+
+Grid (B, W/bw, S/c) with the sequence dim innermost (scratch h carries
+across sequence blocks, resets per (batch, width-block)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rg_lru_kernel(a_ref, x_ref, y_ref, h_ref, *, chunk: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)            # (c, bw)
+    x = x_ref[0].astype(jnp.float32)            # (c, bw)
+
+    def body(t, carry):
+        h = carry
+        h = a[t] * h + x[t]
+        y_ref[0, t, :] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, body, h_ref[...])
+    h_ref[...] = h
+
+
+def rg_lru_bsw(a, x, *, block_w: int = 512, block_s: int = 128,
+               interpret: bool = False):
+    """a, x: (B, S, W) f32 -> h: (B, S, W) f32 (full hidden trajectory)."""
+    B, S, W = a.shape
+    bw = min(block_w, W)
+    c = min(block_s, S)
+    assert W % bw == 0 and S % c == 0, (W, bw, S, c)
+    grid = (B, W // bw, S // c)
+
+    kernel = functools.partial(_rg_lru_kernel, chunk=c)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, bw), lambda b, w, s: (b, s, w)),
+            pl.BlockSpec((1, c, bw), lambda b, w, s: (b, s, w)),
+        ],
+        out_specs=pl.BlockSpec((1, c, bw), lambda b, w, s: (b, s, w)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
+        interpret=interpret,
+    )(a, x)

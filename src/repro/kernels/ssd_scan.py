@@ -1,0 +1,96 @@
+"""Mamba2 SSD chunk scan (TPU Pallas).
+
+Grid (B, H, nc) with the chunk index innermost: the inter-chunk SSM state
+(P × N) lives in VMEM scratch and is carried across grid steps — the
+TPU-native equivalent of the CUDA chunked-scan in the Mamba2 paper (grid
+iterations on TPU run sequentially minor-to-major, so scratch accumulation
+over the chunk axis is the idiomatic carry).
+
+Per chunk (c = chunk length):
+    y_off  = (C · exp(cs)) @ state            inter-chunk contribution
+    y_diag = tril(C Bᵀ ⊙ decay) ⊙ dt @ x      intra-chunk (MXU matmuls)
+    state  = state · exp(cs_last) + (x ⊙ seg)ᵀ B
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, cs_ref, b_ref, c_ref, y_ref, hlast_ref,
+                state_ref, *, chunk: int):
+    z = pl.program_id(2)
+    nz = pl.num_programs(2)
+
+    @pl.when(z == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)       # (c, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)     # (c,)
+    cs = cs_ref[0, 0, 0].astype(jnp.float32)     # (c,)  cumsum(A·dt)
+    Bm = b_ref[0, 0].astype(jnp.float32)         # (c, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)         # (c, N)
+    state = state_ref[...]                       # (P, N)
+
+    # inter-chunk: y_off[i] = (C_i · exp(cs_i)) @ state^T
+    c_scaled = Cm * jnp.exp(cs)[:, None]                          # (c, N)
+    y_off = jax.lax.dot_general(c_scaled, state,
+                                (((1,), (1,)), ((), ())))         # (c, P)
+
+    # intra-chunk: att[i,j] = C_i·B_j · exp(cs_i - cs_j) · dt_j  (i >= j)
+    att = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))   # (c, c)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(cs[:, None] - cs[None, :])
+    w = jnp.where(rows >= cols, att * decay * dt[None, :], 0.0)
+    y_diag = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())))  # (c, P)
+
+    y_ref[0, 0, 0] = (y_off + y_diag).astype(y_ref.dtype)
+
+    # state update: state = state·exp(cs_last) + Σ_j exp(cs_last-cs_j)·dt_j·x_j⊗B_j
+    seg = jnp.exp(cs[-1] - cs) * dt                               # (c,)
+    xw = x * seg[:, None]                                         # (c, P)
+    upd = jax.lax.dot_general(xw, Bm, (((0,), (0,)), ((), ())))   # (P, N)
+    state_ref[...] = state * jnp.exp(cs[-1]) + upd
+
+    @pl.when(z == nz - 1)
+    def _finalize():
+        hlast_ref[0, 0] = state_ref[...]
+
+
+def ssd_scan_bhzc(x, dt, cs, Bm, Cm, *, interpret: bool = False):
+    """x: (B,H,nc,c,P); dt,cs: (B,H,nc,c); Bm,Cm: (B,nc,c,N).
+
+    Returns (y: (B,H,nc,c,P) f32-accurate in x.dtype, h_last: (B,H,P,N) f32).
+    """
+    B, H, nc, c, P = x.shape
+    N = Bm.shape[-1]
+    kernel = functools.partial(_ssd_kernel, chunk=c)
+    grid = (B, H, nc)
+    y, hlast = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, c, P), lambda b, h, z: (b, h, z, 0, 0)),
+            pl.BlockSpec((1, 1, 1, c), lambda b, h, z: (b, h, z, 0)),
+            pl.BlockSpec((1, 1, 1, c), lambda b, h, z: (b, h, z, 0)),
+            pl.BlockSpec((1, 1, c, N), lambda b, h, z: (b, z, 0, 0)),
+            pl.BlockSpec((1, 1, c, N), lambda b, h, z: (b, z, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, c, P), lambda b, h, z: (b, h, z, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, z: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nc, c, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, cs, Bm, Cm)
+    return y, hlast

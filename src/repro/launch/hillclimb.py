@@ -1,0 +1,149 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Perf hillclimbing harness (§Perf): hypothesis → change → measure.
+
+Each VARIANT of a cell re-lowers the full production step with config
+overrides (and optionally patched sharding rules), re-derives the three
+roofline terms, and records before/after against the dry-run baseline.
+Results land in ``experiments/hillclimb/``; EXPERIMENTS.md §Perf narrates.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell moe
+"""
+import argparse
+import json
+from pathlib import Path
+
+from .dryrun import OUT_DIR, build_cell, collective_bytes, _mem_dict, _probe, \
+    extrapolate
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from .roofline import cell_terms, load_cell, model_flops
+
+HC_DIR = OUT_DIR.parent / "hillclimb"
+
+# variant = (name, cfg overrides, rules patch)
+CELLS = {
+    # (c) most paper-representative: MoE token dispatch IS the paper's
+    # scheduling problem (tasks -> heterogeneous executors)
+    "moe": ("deepseek-moe-16b", "train_4k", [
+        ("moe_sort", {"moe_impl": "sort"}, None),
+        ("moe_group_512", {"moe_group_size": 512}, None),
+        ("moe_group_8192", {"moe_group_size": 8192}, None),
+        ("moe_sort_selremat", {"moe_impl": "sort", "remat": "selective"}, None),
+    ]),
+    # (b) most collective-bound: 132B weights all-gathered per decoded token
+    "decode": ("dbrx-132b", "decode_32k", [
+        ("kv_int8", {"kv_cache_dtype": "int8"}, None),
+        # weight-stationary decode: replicate the (tiny) batch activations,
+        # keep weights resident-sharded; matmuls partial-sum over fsdp
+        ("weight_stationary", {}, {"batch": None}),
+        ("ws_kv_int8", {"kv_cache_dtype": "int8"}, {"batch": None}),
+    ]),
+    # (a) worst roofline fraction: B=1 long-context decode on a 130M SSM —
+    # fixed collective latency swamps nanoseconds of compute
+    "long": ("mamba2-130m", "long_500k", [
+        ("tp_off", {}, {"model": None, "expert": None, "kv_seq": None}),
+        # right-size the deployment: a 4×4 serving slice (DS3-autotuner move)
+        ("slice_4x4", {}, None, (4, 4)),
+        ("slice_1x4", {}, None, (1, 4)),
+    ]),
+}
+
+EXTRA_MOE = [
+    ("group512_selremat", {"moe_group_size": 512, "remat": "selective"}, None),
+    ("group512_bf16scores", {"moe_group_size": 512,
+                             "attn_scores_f32": False}, None),
+]
+CELLS["moe"][2].extend(EXTRA_MOE)
+
+
+def measure(arch, shape, overrides=None, rules_patch=None, probes=True,
+            mesh_shape=None):
+    lowered, mesh, _, _ = build_cell(arch, shape, False, overrides=overrides,
+                                     rules_patch=rules_patch,
+                                     mesh_shape=mesh_shape)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    mem = _mem_dict(compiled)
+    cres, cwire, ccounts = collective_bytes(compiled.as_text())
+    rec = {
+        "arch": arch, "shape": shape, "mesh": "pod16x16", "runnable": True,
+        "num_devices": int(mesh.size),
+        "flops": float(cost.get("flops", -1)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1)),
+        "memory_analysis": mem, "collective_bytes": cres,
+        "collective_wire_bytes": cwire, "collective_counts": ccounts,
+    }
+    if probes:
+        ov = dict(overrides or {})
+        p1 = _probe_with(arch, shape, 1, ov, rules_patch, mesh_shape)
+        p2 = _probe_with(arch, shape, 2, ov, rules_patch, mesh_shape)
+        rec["extrapolated"] = extrapolate(arch, p1, p2)
+    return rec
+
+
+def _probe_with(arch, shape, repeats, overrides, rules_patch,
+                mesh_shape=None):
+    from ..configs import get_config
+    cfg = get_config(arch)
+    patlen = len(cfg.block_pattern) if not cfg.is_encoder_decoder else 1
+    ov = dict(overrides)
+    ov.update({"num_layers": repeats * patlen, "scan_layers": False,
+               "attn_impl": "blocked_unroll"})
+    if cfg.is_encoder_decoder:
+        ov["num_encoder_layers"] = repeats
+    lowered, _, _, _ = build_cell(arch, shape, False, overrides=ov,
+                                  probe_accum=1, rules_patch=rules_patch,
+                                  mesh_shape=mesh_shape)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    cres, cwire, _ = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": cres, "wire": cwire}
+
+
+def fmt(rec):
+    t = cell_terms(rec)
+    mem = rec.get("memory_analysis", {})
+    hbm = (mem.get("temp_size_in_bytes", 0)
+           + mem.get("argument_size_in_bytes", 0)) / 1e9
+    if t is None:
+        return f"hbm={hbm:.1f}GB (no probes)"
+    return (f"comp={t['t_compute']:.3e}s mem={t['t_memory']:.3e}s "
+            f"coll={t['t_collective']:.3e}s dom={t['dominant']} "
+            f"useful={t['model_flops_frac']:.2f} hbm={hbm:.1f}GB")
+
+
+def run_cell_variants(key: str):
+    arch, shape, variants = CELLS[key]
+    HC_DIR.mkdir(parents=True, exist_ok=True)
+    base = load_cell(arch, shape, "pod16x16")
+    print(f"=== {key}: {arch} × {shape} ===")
+    print(f"baseline       : {fmt(base)}")
+    results = {"baseline": base}
+    for var in variants:
+        name, ov, rp = var[0], var[1], var[2]
+        ms = var[3] if len(var) > 3 else None
+        try:
+            rec = measure(arch, shape, overrides=ov or None, rules_patch=rp,
+                          mesh_shape=ms)
+            results[name] = rec
+            (HC_DIR / f"{arch}__{shape}__{name}.json").write_text(
+                json.dumps(rec, indent=1))
+            print(f"{name:<15}: {fmt(rec)}")
+        except Exception as e:                       # noqa: BLE001
+            print(f"{name:<15}: FAILED {e!r}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(CELLS) + ["all"], default="all")
+    args = ap.parse_args()
+    for key in (CELLS if args.cell == "all" else [args.cell]):
+        run_cell_variants(key)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state.  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benches see the 1 real CPU device.
+
+Target hardware: TPU v5e pods — 16×16 = 256 chips per pod; the multi-pod
+config is 2 pods = 512 chips with the leading ``pod`` axis mapped onto DCN.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..sharding import rules_multi_pod, rules_single_pod
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for CPU smoke runs of the pjit code path."""
+    types = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=types)
+
+
+def rules_for(mesh, *, batch_size: Optional[int] = None,
+              kind: str = "train") -> Dict[str, object]:
+    """Logical-axis rules matching a mesh; drops batch sharding when the
+    global batch cannot be divided over the DP axes (e.g. long_500k B=1).
+
+    ``kind='decode'`` uses the weight-stationary serving layout: batch
+    activations replicate over the data axis while weights stay resident
+    FSDP+TP-sharded, so matmuls partial-sum over tiny activations instead of
+    all-gathering the weights per token (adopted after §Perf iteration on
+    dbrx-132b decode_32k: collective term 0.662 s -> 0.008 s, 10.7× better
+    step bound).  The KV cache keeps its own batch axis (``kv_batch``)."""
+    multi = "pod" in mesh.axis_names
+    rules = rules_multi_pod() if multi else rules_single_pod()
+    if kind == "decode":
+        rules["batch"] = None
+    elif kind == "train_pp" and multi:
+        # pipeline mode: `pod` carries stages, so DP/FSDP stay intra-pod
+        rules["batch"] = "data"
+        rules["kv_batch"] = "data"
+        rules["fsdp"] = "data"
+    if batch_size is not None:
+        dp = mesh.shape["data"] * (mesh.shape["pod"] if multi else 1)
+        if batch_size % dp != 0:
+            b = None if batch_size < dp else "data"
+            if batch_size % mesh.shape["data"] != 0:
+                b = None
+            if kind != "decode":
+                rules["batch"] = b
+            rules["kv_batch"] = b
+    # degenerate host mesh: keep annotations harmless
+    if mesh.shape.get("model", 1) == 1 and mesh.shape.get("data", 1) == 1:
+        rules = {k: None for k in rules}
+    return rules
+
+
+# Hardware constants for the roofline (TPU v5e) --------------------------------
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (~per-chip usable)
+DCN_BW = 25e9                     # bytes/s per chip cross-pod (2 pods)

@@ -1,0 +1,200 @@
+"""Roofline analysis: three terms per (arch × shape × mesh) from the dry-run.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s            [s]
+    memory term     = HLO_bytes_per_device / HBM_bw                 [s]
+    collective term = Σ_kind wire_bytes_per_device / link_bw        [s]
+
+Sources: per-device FLOPs/bytes come from the depth-extrapolated probe pair
+(``dryrun._probe`` — XLA counts scanned bodies once, so the probes unroll);
+collective wire bytes from the partitioned-HLO parse with ring factors.
+MODEL_FLOPS (= 6·N_active·D analytics) / HLO_FLOPs flags remat/dispatch
+waste.  Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s ICI.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--mesh pod16x16]
+Writes ``experiments/roofline.md`` and prints the table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+from ..configs import ARCHITECTURES, SHAPES, get_config, get_shape
+from ..models.transformer import stack_layout
+from .dryrun import OUT_DIR
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+MD_OUT = OUT_DIR.parent / "roofline.md"
+
+
+# ------------------------------------------------------------ analytic flops
+
+def _matmul_params(cfg) -> Dict[str, float]:
+    """Active matmul params per token, by component (MoE counts top-k only)."""
+    D, H, KV, Dh, F = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                       cfg.head_dim, cfg.d_ff)
+    pat, reps, tail = stack_layout(cfg)
+    blocks = list(pat) * reps + list(tail)
+    attn_p = D * H * Dh + 2 * D * KV * Dh + H * Dh * D
+    if cfg.num_experts:
+        mlp_p = (3 * D * cfg.moe_d_ff * cfg.top_k
+                 + 3 * D * cfg.moe_d_ff * cfg.num_shared_experts
+                 + D * cfg.num_experts)                     # router
+    else:
+        gated = cfg.act in ("silu", "geglu")
+        mlp_p = (3 if gated else 2) * D * F
+    mamba_p = 0.0
+    if "mamba2" in blocks:
+        Din, N = cfg.d_inner, cfg.ssm_state
+        mamba_p = D * Din + D * (Din + 2 * N) + D * cfg.ssm_heads + Din * D
+    rglru_p = 0.0
+    if "rglru" in blocks:
+        W = cfg.lru_width
+        rglru_p = 2 * D * W + 2 * W * (W // max(cfg.num_heads, 1)) + W * D
+    out = {"attn_proj": 0.0, "ffn": 0.0, "rec": 0.0, "enc": 0.0}
+    for b in blocks:
+        if b in ("global", "local", "enc", "xdec"):
+            out["attn_proj"] += attn_p * (2 if b == "xdec" else 1)
+            out["ffn"] += mlp_p
+        elif b == "rglru":
+            out["rec"] += rglru_p
+            out["ffn"] += mlp_p
+        elif b == "mamba2":
+            out["rec"] += mamba_p
+    if cfg.is_encoder_decoder:
+        out["enc"] = (attn_p + mlp_p) * cfg.num_encoder_layers
+    out["head"] = cfg.d_model * cfg.padded_vocab
+    return out
+
+
+def _attn_score_flops(cfg, S: int, kv_len: int, batch: int) -> float:
+    """Softmax-path FLOPs (QK^T + PV) for one forward, all layers."""
+    pat, reps, tail = stack_layout(cfg)
+    blocks = list(pat) * reps + list(tail)
+    H, Dh = cfg.num_heads, cfg.head_dim
+    total = 0.0
+    for b in blocks:
+        if b in ("global", "xdec"):
+            total += 4.0 * batch * S * kv_len * H * Dh
+            if b == "xdec":
+                total += 4.0 * batch * S * min(kv_len, 4096) * H * Dh
+        elif b == "local":
+            total += 4.0 * batch * S * min(cfg.window_size, kv_len) * H * Dh
+    return total
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Global useful FLOPs per step: 6·N_active·tokens (+ attention)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    parts = _matmul_params(cfg)
+    n_active = sum(parts.values())
+    B, S = shape.global_batch, shape.seq_len
+    H, Dh = cfg.num_heads, cfg.head_dim
+    enc_attn = (4.0 * B * S * S * H * Dh * cfg.num_encoder_layers
+                if cfg.is_encoder_decoder else 0.0)
+    if shape.kind == "train":
+        return (6.0 * n_active * B * S
+                + 3.0 * (_attn_score_flops(cfg, S, S, B) + enc_attn))
+    if shape.kind == "prefill":
+        if cfg.is_encoder_decoder:
+            # encoder runs the full S frames; the decoder only prefills the
+            # prompt (64 tokens) + cross-attends the encoder output
+            from .specs import SEAMLESS_PREFILL_PROMPT as DEC
+            dec_p = n_active - parts["enc"] - parts["head"]
+            attn = (enc_attn
+                    + 4.0 * B * DEC * DEC * H * Dh * cfg.num_layers
+                    + 4.0 * B * DEC * S * H * Dh * cfg.num_layers)
+            return (2.0 * parts["enc"] * B * S + 2.0 * dec_p * B * DEC
+                    + 2.0 * parts["head"] * B * DEC + attn)
+        return 2.0 * n_active * B * S + _attn_score_flops(cfg, S, S, B)
+    # decode: one token over a kv_len cache (the encoder does not run)
+    dec_active = n_active - parts["enc"]
+    return (2.0 * dec_active * B + _attn_score_flops(cfg, 1, S, B))
+
+
+# ------------------------------------------------------------ table builder
+
+def load_cell(arch: str, shape: str, mesh: str) -> Optional[dict]:
+    p = OUT_DIR / f"{arch}__{shape}__{mesh}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def cell_terms(rec: dict) -> Optional[dict]:
+    if not rec.get("runnable") or "extrapolated" not in rec:
+        return None
+    ex = rec["extrapolated"]
+    nd = rec["num_devices"]
+    t_c = ex["flops"] / PEAK_FLOPS_BF16
+    t_m = ex["bytes"] / HBM_BW
+    t_n = sum(ex["wire"].values()) / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_n)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"]) / nd
+    hlo = max(ex["flops"], 1e-9)
+    mem = rec.get("memory_analysis", {})
+    hbm_gb = (mem.get("temp_size_in_bytes", 0)
+              + mem.get("argument_size_in_bytes", 0)) / 1e9
+    bound = max(t_c, t_m, t_n)
+    return dict(t_compute=t_c, t_memory=t_m, t_collective=t_n, dominant=dom,
+                model_flops_frac=mf / hlo, hbm_gb=hbm_gb,
+                roofline_frac=t_c / bound if bound > 0 else 0.0)
+
+
+_ADVICE = {
+    "compute": "compute-bound: cut redundant FLOPs (remat policy, causal-"
+               "block skipping, MoE dispatch) or it is already near-roofline",
+    "memory": "HBM-bound: raise arithmetic intensity — fuse attention "
+              "(Pallas flash kernel), int8/KV-cache quantisation, larger "
+              "per-chunk tiles",
+    "collective": "ICI-bound: reshard to cut all-gathers (bigger per-device "
+                  "blocks), overlap collectives with compute, or compress "
+                  "the gradient/activation wire format",
+}
+
+
+def build_table(mesh: str = "pod16x16") -> str:
+    rows = []
+    for arch in sorted(ARCHITECTURES):
+        for shape in sorted(SHAPES):
+            rec = load_cell(arch, shape, mesh)
+            if rec is None:
+                continue
+            if not rec.get("runnable"):
+                rows.append((arch, shape, None, rec.get("skip_reason", "")))
+                continue
+            rows.append((arch, shape, cell_terms(rec), ""))
+
+    md = [f"## Roofline — mesh {mesh} (per-device terms, seconds/step)\n",
+          "| arch | shape | compute s | memory s | collective s | dominant |"
+          " MODEL/HLO | HBM GB | next lever |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    for arch, shape, t, skip in rows:
+        if t is None:
+            md.append(f"| {arch} | {shape} | — | — | — | skipped | — | — |"
+                      f" {skip} |")
+            continue
+        md.append(
+            f"| {arch} | {shape} | {t['t_compute']:.3e} | {t['t_memory']:.3e}"
+            f" | {t['t_collective']:.3e} | **{t['dominant']}** |"
+            f" {t['model_flops_frac']:.2f} | {t['hbm_gb']:.1f} |"
+            f" {_ADVICE[t['dominant']]} |")
+    return "\n".join(md) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    table = build_table(args.mesh)
+    MD_OUT.parent.mkdir(parents=True, exist_ok=True)
+    MD_OUT.write_text(table)
+    print(table)
+    print(f"written to {MD_OUT}")
+
+
+if __name__ == "__main__":
+    main()

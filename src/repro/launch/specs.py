@@ -1,0 +1,89 @@
+"""ShapeDtypeStruct stand-ins + sharding specs for every model input.
+
+Nothing here allocates device memory: the dry-run lowers against these
+abstract values (the shannon/kernels pattern — weak-type-correct, shardable).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import Model
+from ..sharding import logical_to_pspec
+
+SEAMLESS_DECODE_ENC_LEN = 4096     # encoder length backing decode-shape cells
+SEAMLESS_PREFILL_PROMPT = 64      # decoder prompt tokens during prefill
+
+
+def _bt(*axes):
+    return logical_to_pspec(axes)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig
+                ) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, P]]:
+    """(ShapeDtypeStructs, PartitionSpecs) for the data batch."""
+    B, S = shape.global_batch, shape.seq_len
+    i32, act = jnp.int32, jnp.dtype(cfg.dtype)
+    sds: Dict[str, Any] = {}
+    ps: Dict[str, Any] = {}
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "vision":
+            n = cfg.num_prefix_tokens
+            sds["patch_embeds"] = jax.ShapeDtypeStruct((B, n, cfg.d_model), act)
+            ps["patch_embeds"] = _bt("batch", None, None)
+            sds["tokens"] = jax.ShapeDtypeStruct((B, S - n), i32)
+        elif cfg.frontend == "audio":
+            sds["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), act)
+            ps["frames"] = _bt("batch", None, None)
+            dec = SEAMLESS_PREFILL_PROMPT if shape.kind == "prefill" else S
+            sds["tokens"] = jax.ShapeDtypeStruct((B, dec), i32)
+        else:
+            sds["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        ps["tokens"] = _bt("batch", None)
+        if shape.kind == "train":
+            sds["labels"] = jax.ShapeDtypeStruct(sds["tokens"].shape, i32)
+            ps["labels"] = _bt("batch", None)
+    else:                                   # decode
+        sds["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+        ps["tokens"] = _bt("batch", None)
+    return sds, ps
+
+
+def cache_specs(model: Model, shape: ShapeConfig
+                ) -> Tuple[Any, Any]:
+    """(abstract cache tree, PartitionSpec tree).  Batch dim is index 1 for
+    scan-stacked leaves ('stack' subtree), else index 0."""
+    cfg = model.cfg
+    enc_len = (min(shape.seq_len, SEAMLESS_DECODE_ENC_LEN)
+               if cfg.is_encoder_decoder else 0)
+    cache = model.init_cache(shape.global_batch, shape.seq_len,
+                             enc_len=enc_len, abstract=True)
+
+    def spec_for(path, leaf):
+        keys = {getattr(k, "key", None) for k in path}
+        stacked = "stack" in keys
+        bdim = 1 if stacked else 0
+        axes = [None] * leaf.ndim
+        axes[bdim] = "kv_batch"
+        # KV caches (B, L, KV, Dh): KV heads are often too few to TP-shard,
+        # so the SEQUENCE dim shards over the otherwise-idle `model` axis —
+        # flash-decode style distributed attention (partial softmax per shard
+        # + tiny cross-shard combine), 16× less cache per chip.
+        if ({"kv", "ck", "cv"} & keys) and leaf.ndim >= bdim + 4:
+            axes[bdim + 1] = "model"
+        return logical_to_pspec(axes)
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, cache)
+    return cache, specs
+
+
+def named(mesh, tree):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps),
+        tree, is_leaf=lambda x: isinstance(x, P))

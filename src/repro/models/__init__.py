@@ -1,0 +1,5 @@
+"""Model substrate: layers, attention, MoE, SSM, Griffin, stacks, Model API."""
+from .model import Model, build_model
+from .params import ParamStore
+
+__all__ = ["Model", "build_model", "ParamStore"]

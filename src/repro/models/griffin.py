@@ -1,0 +1,139 @@
+"""Griffin recurrent block (RecurrentGemma): conv1d + RG-LRU gated recurrence.
+
+    y = W_out( GeLU(W_gate·x) ⊙ RG-LRU(conv1d(W_x·x)) )
+
+RG-LRU (Real-Gated Linear Recurrent Unit):
+    r_t = σ(blockdiag(W_a)·u_t + b_a)          recurrence gate
+    i_t = σ(blockdiag(W_i)·u_t + b_i)          input gate
+    log a_t = -c · softplus(Λ) · r_t           (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ u_t)
+
+Train/prefill evaluates the recurrence with ``jax.lax.associative_scan``
+(XLA path) or the ``repro.kernels.rg_lru`` sequential-in-VMEM TPU kernel.
+Decode is the O(1) recurrent step.  Constant-size state ⇒ this family runs
+the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import shard
+from .params import ParamStore
+
+RG_LRU_C = 8.0
+
+
+def init_griffin(ps: ParamStore, path: str, cfg: ModelConfig,
+                 stacked: Optional[int]):
+    D, W = cfg.d_model, cfg.lru_width
+    H = cfg.num_heads                         # gate blocks
+    bw = W // H
+    pre = (stacked,) if stacked else ()
+    pax = (None,) if stacked else ()
+    ps.param(f"{path}/w_x", pre + (D, W), pax + ("fsdp", "model"), "fan_in")
+    ps.param(f"{path}/w_gate", pre + (D, W), pax + ("fsdp", "model"), "fan_in")
+    ps.param(f"{path}/conv_w", pre + (cfg.conv_width, W), pax + (None, "model"),
+             "normal", scale=0.1)
+    ps.param(f"{path}/conv_b", pre + (W,), pax + ("model",), "zeros")
+    ps.param(f"{path}/wa", pre + (H, bw, bw), pax + (None, None, None), "fan_in")
+    ps.param(f"{path}/ba", pre + (W,), pax + ("model",), "zeros", dtype=jnp.float32)
+    ps.param(f"{path}/wi", pre + (H, bw, bw), pax + (None, None, None), "fan_in")
+    ps.param(f"{path}/bi", pre + (W,), pax + ("model",), "zeros", dtype=jnp.float32)
+    # Λ init so that a = exp(-c·softplus(Λ)) lands in (0.9, 0.999)
+    ps.param(f"{path}/lam", pre + (W,), pax + ("model",), "normal", scale=0.5,
+             dtype=jnp.float32)
+    ps.param(f"{path}/w_out", pre + (W, D), pax + ("model", "fsdp"), "fan_in")
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pad[:, k:k + x.shape[1], :] * w[k].astype(x.dtype) for k in range(K))
+    return y + b.astype(x.dtype)
+
+
+def _block_linear(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Block-diagonal linear: u (...,W), w (H,bw,bw) -> (...,W)."""
+    H, bw, _ = w.shape
+    uh = u.reshape(*u.shape[:-1], H, bw)
+    y = jnp.einsum("...hi,hij->...hj", uh, w.astype(u.dtype))
+    return y.reshape(*u.shape) + b.astype(u.dtype)
+
+
+def _gates(p, u: jax.Array):
+    """Returns (log_a, gated_input) in f32; u: (..., W)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_linear(uf, p["wa"].astype(jnp.float32), p["ba"]))
+    i = jax.nn.sigmoid(_block_linear(uf, p["wi"].astype(jnp.float32), p["bi"]))
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lam"]) * r       # (..., W)  <= 0
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return log_a, beta * i * uf
+
+
+def rg_lru_scan(p, u: jax.Array, h0: Optional[jax.Array],
+                use_kernel: bool = False):
+    """u: (B,S,W) -> (h_all: (B,S,W) f32, h_last: (B,W) f32)."""
+    log_a, x_in = _gates(p, u)                              # f32
+    a = jnp.exp(log_a)
+    if use_kernel:
+        from ..kernels import ops as kops
+        h = kops.rg_lru(a, x_in, h0)
+    else:
+        if h0 is not None:
+            x_in = x_in.at[:, 0, :].add(a[:, 0, :] * h0)
+        def op(ca, cb):
+            a1, b1 = ca
+            a2, b2 = cb
+            return a1 * a2, a2 * b1 + b2
+        _, h = jax.lax.associative_scan(op, (a, x_in), axis=1)
+    return h, h[:, -1, :]
+
+
+def apply_griffin(p, cfg: ModelConfig, x: jax.Array,
+                  return_cache: bool = False):
+    """Train/prefill.  x: (B,S,D) -> (B,S,D) [+ decode cache]."""
+    B, S, D = x.shape
+    dt_ = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(dt_)))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(dt_))
+    u = shard(u, "batch", None, "model")
+    u_conv = _causal_conv(u, p["conv_w"], p["conv_b"])
+    h, h_last = rg_lru_scan(p, u_conv, None,
+                            use_kernel=(cfg.attn_impl == "pallas"))
+    y = gate * h.astype(dt_)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"].astype(dt_))
+    out = shard(out, "batch", None, None)
+    if not return_cache:
+        return out
+    K = cfg.conv_width
+    return out, {"conv": u[:, S - (K - 1):, :], "h": h_last}
+
+
+def init_griffin_cache(cfg: ModelConfig, batch: int, abstract: bool = False) -> Dict:
+    W = cfg.lru_width
+    dt = jnp.dtype(cfg.dtype)
+    shapes = {"conv": ((batch, cfg.conv_width - 1, W), dt),
+              "h": ((batch, W), jnp.float32)}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+
+
+def decode_griffin(p, cfg: ModelConfig, x: jax.Array, cache: Dict):
+    """One-token step.  x: (B,1,D)."""
+    B = x.shape[0]
+    dt_ = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(dt_)))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(dt_))[:, 0]   # (B,W)
+    hist = jnp.concatenate([cache["conv"], u[:, None, :]], axis=1)
+    w = p["conv_w"].astype(dt_)
+    u_conv = jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"].astype(dt_)
+    log_a, x_in = _gates(p, u_conv)
+    h = jnp.exp(log_a) * cache["h"] + x_in                  # (B,W) f32
+    y = gate[:, 0] * h.astype(dt_)
+    out = jnp.einsum("bw,wd->bd", y, p["w_out"].astype(dt_))[:, None, :]
+    return out, {"conv": hist[:, 1:, :], "h": h}

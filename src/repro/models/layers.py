@@ -1,0 +1,131 @@
+"""Shared layers: norms, RoPE, MLPs, embeddings.
+
+Pure functional JAX: ``init_*`` declares parameters into a ParamStore,
+``apply_*`` consumes the resulting pytree.  Activations are annotated with
+logical sharding axes (no-ops outside a mesh context).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import shard
+from .params import ParamStore
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- RMSNorm
+
+def init_rmsnorm(ps: ParamStore, path: str, dim: int, stacked: Optional[int]):
+    shape = (stacked, dim) if stacked else (dim,)
+    axes = (None, "embed") if stacked else ("embed",)
+    ps.param(f"{path}/scale", shape, axes, init="ones", dtype=jnp.float32)
+
+
+def apply_rmsnorm(p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)                   # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (...,S,half)
+    cos = jnp.cos(angles)[..., None, :]                            # (...,S,1,half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------- MLP
+
+def init_mlp(ps: ParamStore, path: str, cfg: ModelConfig, d_ff: int,
+             stacked: Optional[int]):
+    D, F = cfg.d_model, d_ff
+    pre = (stacked,) if stacked else ()
+    pax = (None,) if stacked else ()
+    gated = cfg.act in ("silu", "geglu")
+    if gated:
+        ps.param(f"{path}/w_gate", pre + (D, F), pax + ("fsdp", "model"), "fan_in")
+    ps.param(f"{path}/w_in", pre + (D, F), pax + ("fsdp", "model"), "fan_in")
+    ps.param(f"{path}/w_out", pre + (F, D), pax + ("model", "fsdp"), "fan_in")
+
+
+def apply_mlp(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = jnp.einsum("...d,df->...f", x, p["w_in"].astype(x.dtype))
+    if "w_gate" in p:
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(x.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = shard(h, "batch", None, "model")
+    return jnp.einsum("...f,fd->...d", h, p["w_out"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------- embeddings
+
+def init_embeddings(ps: ParamStore, cfg: ModelConfig):
+    # std 1/sqrt(D): with the sqrt(D) embedding multiplier the residual
+    # stream starts at unit RMS and tied logits stay O(1)
+    ps.param("embed/tok", (cfg.padded_vocab, cfg.d_model), ("model", "fsdp"),
+             "normal", scale=cfg.d_model ** -0.5)
+    if not cfg.tie_embeddings:
+        ps.param("embed/head", (cfg.d_model, cfg.padded_vocab),
+                 ("fsdp", "model"), "fan_in")
+
+
+def embed_tokens(p, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    emb = p["embed"]["tok"].astype(dtype_of(cfg))
+    x = jnp.take(emb, tokens, axis=0)
+    x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)     # gemma-style scale
+    return shard(x, "batch", None, None)
+
+
+def lm_logits(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = p["embed"]["tok"].astype(x.dtype)               # (V, D)
+        logits = jnp.einsum("...d,vd->...v", x, w)
+    else:
+        w = p["embed"]["head"].astype(x.dtype)              # (D, V)
+        logits = jnp.einsum("...d,dv->...v", x, w)
+    if cfg.final_softcap:
+        c = jnp.asarray(cfg.final_softcap, logits.dtype)
+        logits = jnp.tanh(logits / c) * c
+    if cfg.padded_vocab != cfg.vocab_size:        # mask vocab-padding columns
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab_size, logits,
+                           jnp.asarray(-1e30, logits.dtype))
+    return shard(logits, "batch", None, "model")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE in f32.  logits: (B,S,V); labels: (B,S) int."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,138 @@
+"""Model: the public composable API over all 10 architecture families.
+
+    model = Model(get_config("gemma2-2b"))
+    params = model.init_params(rng)          # or model.abstract_params()
+    loss   = model.loss_fn(params, batch)    # train forward
+    logits, cache = model.prefill(params, batch, max_len)
+    logits, cache = model.decode_step(params, cache, tokens, pos)
+
+Batches are dicts:
+    lm families:  {"tokens": (B,S) i32, "labels": (B,S) i32}
+    vlm:          + {"patch_embeds": (B, n_prefix, D)}   (SigLIP stub)
+    audio:        {"frames": (B, S_enc, D), "tokens", "labels"}  (enc-dec)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import shard
+from . import transformer as tf
+from .layers import (apply_rmsnorm, cross_entropy, dtype_of, embed_tokens,
+                     init_embeddings, init_rmsnorm, lm_logits)
+from .params import ParamStore
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params
+    def _init(self, ps: ParamStore):
+        cfg = self.cfg
+        init_embeddings(ps, cfg)
+        if cfg.frontend == "vision":
+            ps.param("frontend/proj", (cfg.d_model, cfg.d_model),
+                     ("fsdp", None), "fan_in")
+        elif cfg.frontend == "audio":
+            ps.param("frontend/proj", (cfg.d_model, cfg.d_model),
+                     ("fsdp", None), "fan_in")
+        if cfg.is_encoder_decoder:
+            tf.init_stack(ps, "encoder", cfg, encoder=True)
+            init_rmsnorm(ps, "enc_norm", cfg.d_model, None)
+        tf.init_stack(ps, "decoder", cfg)
+        init_rmsnorm(ps, "final_norm", cfg.d_model, None)
+
+    def init_params(self, rng: jax.Array):
+        ps = ParamStore(rng, dtype_of(self.cfg), abstract=False)
+        self._init(ps)
+        self._specs, self._logical = ps.specs, ps.logical
+        return ps.params
+
+    def abstract_params(self):
+        ps = ParamStore(None, dtype_of(self.cfg), abstract=True)
+        self._init(ps)
+        self._specs, self._logical = ps.specs, ps.logical
+        return ps.params
+
+    def param_pspecs(self):
+        """PartitionSpec tree (valid under the currently-installed rules)."""
+        self.abstract_params()
+        return self._specs
+
+    def param_logical(self):
+        self.abstract_params()
+        return self._logical
+
+    def param_count(self) -> int:
+        import math
+        p = self.abstract_params()
+        return sum(math.prod(l.shape) for l in jax.tree.leaves(p))
+
+    # ------------------------------------------------------------- helpers
+    def _embed_inputs(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        x = embed_tokens(params, cfg, batch["tokens"])
+        if cfg.frontend == "vision":
+            pe = batch["patch_embeds"].astype(x.dtype)
+            pe = jnp.einsum("bsd,de->bse", pe,
+                            params["frontend"]["proj"].astype(x.dtype))
+            x = jnp.concatenate([pe, x], axis=1)
+        return shard(x, "batch", None, None)
+
+    def _encode(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        fr = batch["frames"]
+        enc_in = jnp.einsum("bsd,de->bse", fr.astype(dtype_of(cfg)),
+                            params["frontend"]["proj"].astype(dtype_of(cfg)))
+        pos = jnp.arange(enc_in.shape[1])[None, :]
+        h = tf.apply_stack(params["encoder"], cfg, enc_in, pos, encoder=True)
+        return apply_rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+    # ------------------------------------------------------------- train
+    def forward_logits(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        enc_out = self._encode(params, batch) if cfg.is_encoder_decoder else None
+        x = self._embed_inputs(params, batch)
+        pos = jnp.arange(x.shape[1])[None, :]
+        x = tf.apply_stack(params["decoder"], cfg, x, pos, enc_out=enc_out)
+        x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if cfg.frontend == "vision":          # logits over text positions only
+            n = cfg.num_prefix_tokens
+            x = x[:, n:, :]
+        return lm_logits(params, cfg, x)
+
+    def loss_fn(self, params, batch) -> jax.Array:
+        logits = self.forward_logits(params, batch)
+        return cross_entropy(logits, batch["labels"])
+
+    # ------------------------------------------------------------- serve
+    def init_cache(self, batch: int, max_len: int, enc_len: int = 0,
+                   abstract: bool = False):
+        return tf.init_stack_cache(self.cfg, batch, max_len, enc_len, abstract)
+
+    def prefill(self, params, batch, max_len: int):
+        """Returns (last-position logits, cache ready for decode)."""
+        cfg = self.cfg
+        enc_out = self._encode(params, batch) if cfg.is_encoder_decoder else None
+        x = self._embed_inputs(params, batch)
+        pos = jnp.arange(x.shape[1])[None, :]
+        x, cache = tf.prefill_stack(params["decoder"], cfg, x, pos, max_len,
+                                    enc_out=enc_out)
+        x = apply_rmsnorm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+        return lm_logits(params, cfg, x), cache
+
+    def decode_step(self, params, cache, tokens: jax.Array, pos: jax.Array):
+        """tokens: (B,1) i32; pos: scalar i32 position of the new token."""
+        cfg = self.cfg
+        x = embed_tokens(params, cfg, tokens)
+        x, cache = tf.decode_stack(params["decoder"], cfg, x, cache, pos)
+        x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return lm_logits(params, cfg, x), cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,168 @@
+"""Mixture-of-Experts: shared + routed experts, top-k routing.
+
+Two dispatch implementations (perf lever, see EXPERIMENTS.md §Perf):
+
+* ``onehot`` — GShard/Switch-style capacity dispatch via one-hot einsums.
+  Fully dense, MXU-friendly, the classic TPU formulation; but dispatch FLOPs
+  scale with group size and dominate for fine-grained experts.
+* ``sort`` — sort-based gather/scatter routing: tokens are sorted by expert,
+  sliced into equal-capacity bins, processed with a batched matmul, and
+  scattered back.  No dispatch matmuls: the routing becomes memory movement,
+  which is what a TPU gather/scatter engine is for.
+
+Both honour a capacity factor (tokens over capacity are dropped — their
+residual stream passes through, standard for capacity-based MoE).
+Experts shard over the ``model`` mesh axis (expert parallelism); the router
+runs in fp32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import shard
+from .layers import apply_mlp, init_mlp
+from .params import ParamStore
+
+MOE_GROUP_SIZE = 2048      # tokens per routing group (onehot path)
+MOE_IMPL = ("onehot", "sort")
+
+
+def init_moe(ps: ParamStore, path: str, cfg: ModelConfig,
+             stacked: Optional[int]):
+    D, F, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    pre = (stacked,) if stacked else ()
+    pax = (None,) if stacked else ()
+    ps.param(f"{path}/router", pre + (D, E), pax + ("fsdp", None), "fan_in",
+             dtype=jnp.float32)
+    ps.param(f"{path}/w_gate", pre + (E, D, F), pax + ("expert", "fsdp", None), "fan_in")
+    ps.param(f"{path}/w_in", pre + (E, D, F), pax + ("expert", "fsdp", None), "fan_in")
+    ps.param(f"{path}/w_out", pre + (E, F, D), pax + ("expert", None, "fsdp"), "fan_in")
+    if cfg.num_shared_experts:
+        init_mlp(ps, f"{path}/shared", cfg,
+                 cfg.moe_d_ff * cfg.num_shared_experts, stacked)
+
+
+def _router_probs(p, cfg: ModelConfig, x: jax.Array):
+    """(T, E) f32 probabilities + (T, k) top-k indices/weights."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, cfg.top_k)                  # (T,k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)  # renormalise
+    return probs, topi, topw
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+# ---------------------------------------------------------------- onehot path
+
+def _moe_onehot(p, cfg: ModelConfig, xg: jax.Array) -> jax.Array:
+    """xg: (G, S, D) grouped tokens -> (G, S, D)."""
+    G, S, D = xg.shape
+    E, k = cfg.num_experts, cfg.top_k
+    C = _capacity(S, cfg)
+    dt = xg.dtype
+
+    x2 = xg.reshape(G * S, D)
+    probs, topi, topw = _router_probs(p, cfg, x2)
+    topi = topi.reshape(G, S, k)
+    topw = topw.reshape(G, S, k).astype(jnp.float32)
+
+    # position of each (token, choice) within its expert's capacity
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.int32)             # (G,S,k,E)
+    flat = onehot.reshape(G, S * k, E)        # lexicographic (token, choice)
+    pos4 = (jnp.cumsum(flat, axis=1) - flat).reshape(G, S, k, E)  # (G,S,k,E)
+
+    # dispatch/combine (G,S,E,C) accumulated per choice — avoids any
+    # (G,S,k,E,C) 5-D temporary
+    disp = jnp.zeros((G, S, E, C), dt)
+    comb = jnp.zeros((G, S, E, C), jnp.float32)
+    for kk in range(k):
+        oh_e = onehot[:, :, kk, :]                                # (G,S,E) int
+        slot = (pos4[:, :, kk, :] * oh_e).sum(-1)                 # (G,S)
+        keep = (slot < C).astype(jnp.float32)
+        oh_c = jax.nn.one_hot(jnp.minimum(slot, C - 1), C,
+                              dtype=jnp.float32) * keep[..., None]  # (G,S,C)
+        d = oh_e.astype(jnp.float32)[..., None] * oh_c[:, :, None, :]
+        disp = disp + d.astype(dt)
+        comb = comb + d * topw[:, :, kk, None, None]
+
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xg)                   # (G,E,C,D)
+    xe = shard(xe, "batch", "expert", None, None)
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(dt))) * \
+        jnp.einsum("gecd,edf->gecf", xe, p["w_in"].astype(dt))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_out"].astype(dt))   # (G,E,C,D)
+    ye = shard(ye, "batch", "expert", None, None)
+    return jnp.einsum("gsec,gecd->gsd", comb.astype(dt), ye)
+
+
+# ---------------------------------------------------------------- sort path
+
+def _moe_sort(p, cfg: ModelConfig, xg: jax.Array) -> jax.Array:
+    """Sort-based routing: (G,S,D) -> (G,S,D) with no dispatch matmuls."""
+    G, S, D = xg.shape
+    E, k = cfg.num_experts, cfg.top_k
+    C = _capacity(S, cfg)
+    dt = xg.dtype
+
+    def per_group(x):                                            # (S, D)
+        probs, topi, topw = _router_probs(p, cfg, x)             # (S,k)
+        tok = jnp.tile(jnp.arange(S, dtype=jnp.int32)[:, None], (1, k)).reshape(-1)
+        eid = topi.reshape(-1)
+        w = topw.reshape(-1)
+        order = jnp.argsort(eid, stable=True)                    # group by expert
+        eid_s, tok_s, w_s = eid[order], tok[order], w[order]
+        # slot within expert = rank - first_rank_of_expert
+        ranks = jnp.arange(S * k, dtype=jnp.int32)
+        first = jnp.searchsorted(eid_s, jnp.arange(E, dtype=jnp.int32),
+                                 side="left").astype(jnp.int32)
+        slot = ranks - first[eid_s]
+        keep = slot < C
+        dest = eid_s * C + jnp.minimum(slot, C - 1)
+        # gather tokens into (E*C, D) bins
+        xbin = jnp.zeros((E * C, D), dt).at[dest].add(
+            jnp.where(keep[:, None], x[tok_s], 0).astype(dt))
+        xbin = xbin.reshape(E, C, D)
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", xbin, p["w_gate"].astype(dt))) * \
+            jnp.einsum("ecd,edf->ecf", xbin, p["w_in"].astype(dt))
+        ybin = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(dt))
+        y = jnp.zeros((S, D), jnp.float32).at[tok_s].add(
+            jnp.where(keep, w_s, 0.0)[:, None]
+            * ybin.reshape(E * C, D)[dest].astype(jnp.float32))
+        return y.astype(dt)
+
+    return jax.vmap(per_group)(xg)
+
+
+# ---------------------------------------------------------------- public API
+
+def apply_moe(p, cfg: ModelConfig, x: jax.Array,
+              impl: str = "onehot", group_size: int = MOE_GROUP_SIZE) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).  Routed experts + optional shared experts."""
+    B, S, D = x.shape
+    T = B * S
+    gs = min(group_size, T)
+    G = T // gs
+    assert G * gs == T, f"tokens {T} not divisible by group size {gs}"
+    xg = x.reshape(G, gs, D)
+    xg = shard(xg, "batch", None, None)
+    if impl == "onehot":
+        y = _moe_onehot(p, cfg, xg)
+    elif impl == "sort":
+        y = _moe_sort(p, cfg, xg)
+    else:
+        raise ValueError(f"moe impl {impl!r}")
+    y = y.reshape(B, S, D)
+    if cfg.num_shared_experts:
+        y = y + apply_mlp(p["shared"], cfg, x)
+    return y

@@ -1,0 +1,84 @@
+"""Parameter store: one declaration -> arrays, shape structs AND shardings.
+
+Model init code declares every parameter once (path, shape, logical axes);
+the store can materialise real arrays (smoke tests / training), abstract
+``ShapeDtypeStruct``s (dry-run lowering — no allocation), and the matching
+``PartitionSpec`` tree (pjit in/out shardings) from the same declaration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..sharding import logical_to_pspec
+
+Pytree = Any
+
+
+def _set_path(tree: Dict, path: str, leaf: Any) -> None:
+    parts = path.split("/")
+    for p in parts[:-1]:
+        tree = tree.setdefault(p, {})
+    assert parts[-1] not in tree, f"duplicate param {path}"
+    tree[parts[-1]] = leaf
+
+
+class ParamStore:
+    """Collects parameter declarations during a model's ``init`` walk."""
+
+    def __init__(self, rng: Optional[jax.Array], dtype: jnp.dtype,
+                 abstract: bool = False):
+        self.rng = rng
+        self.dtype = dtype
+        self.abstract = abstract
+        self.params: Dict = {}
+        self.specs: Dict = {}
+        self.logical: Dict = {}
+
+    def param(self, path: str, shape: Sequence[int],
+              axes: Sequence[Optional[str]], init: str = "normal",
+              scale: Optional[float] = None, dtype: Optional[jnp.dtype] = None):
+        shape = tuple(int(s) for s in shape)
+        assert len(axes) == len(shape), f"{path}: axes {axes} vs shape {shape}"
+        dt = dtype or self.dtype
+        if self.abstract:
+            leaf = jax.ShapeDtypeStruct(shape, dt)
+        else:
+            key = jax.random.fold_in(self.rng, zlib_crc(path))
+            if init == "normal":
+                s = scale if scale is not None else 0.02
+                leaf = (jax.random.normal(key, shape, jnp.float32) * s).astype(dt)
+            elif init == "fan_in":
+                fan = max(shape[0] if len(shape) == 1 else int(np.prod(shape[:-1])), 1)
+                s = (scale if scale is not None else 1.0) / np.sqrt(fan)
+                leaf = (jax.random.normal(key, shape, jnp.float32) * s).astype(dt)
+            elif init == "zeros":
+                leaf = jnp.zeros(shape, dt)
+            elif init == "ones":
+                leaf = jnp.ones(shape, dt)
+            else:
+                raise ValueError(f"unknown init {init!r}")
+        _set_path(self.params, path, leaf)
+        _set_path(self.specs, path, logical_to_pspec(axes))
+        _set_path(self.logical, path, tuple(axes))
+        return leaf
+
+
+def zlib_crc(s: str) -> int:
+    import zlib
+    return zlib.crc32(s.encode()) & 0x7FFFFFFF
+
+
+def tree_pspecs_from_logical(logical_tree: Pytree) -> Pytree:
+    """Re-map a logical-axes tree to PartitionSpecs under the current rules."""
+    return jax.tree.map(
+        lambda axes: logical_to_pspec(axes),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )

@@ -1,0 +1,109 @@
+"""Pipeline parallelism: GPipe schedule over the ``pod`` mesh axis.
+
+At 1000+ node scale the cross-pod (DCN) links are too slow for FSDP weight
+gathers; the classic alternative is pipeline stages across pods with DP/TP
+inside each pod.  This module implements that as a drop-in replacement for
+the layer-stack scan:
+
+* the layer-stacked parameters' leading repeat dim is sharded over ``pod``
+  (stage s holds repeats [s·R/P, (s+1)·R/P));
+* a partial-manual ``shard_map`` (manual over ``pod`` only — ``data`` and
+  ``model`` sharding stay automatic inside the body, so TP/DP/FSDP compose);
+* the GPipe tick loop runs M + P − 1 ticks; activations hop stages via
+  ``lax.ppermute`` (differentiable: backward is the reverse permute, i.e.
+  the standard 1F1B-ish backward bubble under ``jax.grad``);
+* microbatch outputs are collected on the last stage and combined with a
+  masked ``psum`` (the embedding/LM head run outside the pipeline on every
+  pod — vocab stays sharded over ``model``).
+
+Enabled via ``cfg.pipeline_stages > 1`` (requires repeats % stages == 0,
+decoder-only stacks); batch sharding should map to ``data`` only (the
+``pod`` axis carries stages, not data) — see ``rules_for(kind='train_pp')``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..sharding import current_mesh, logical_to_pspec, shard
+
+
+def _pspec_with_pod_stage(leaf_ndim: int) -> P:
+    return P(*(("pod",) + (None,) * (leaf_ndim - 1)))
+
+
+def pipeline_stack(params_stack: Dict, cfg: ModelConfig, x: jax.Array,
+                   positions: jax.Array, one_repeat, num_microbatches: int):
+    """Run the scanned superblock stack as a GPipe pipeline over ``pod``.
+
+    ``one_repeat(x, param_slice) -> x`` applies one superblock (the same
+    body the scan path uses).  Returns the stack output for the full batch.
+    """
+    mesh = current_mesh()
+    assert mesh is not None and "pod" in mesh.axis_names, \
+        "pipeline_stages > 1 needs a mesh with a 'pod' axis"
+    stages = mesh.shape["pod"]
+    reps = jax.tree.leaves(params_stack)[0].shape[0]
+    assert reps % stages == 0, f"repeats {reps} % stages {stages} != 0"
+    B = x.shape[0]
+    M = num_microbatches
+    assert B % M == 0, f"batch {B} % microbatches {M} != 0"
+
+    bspec = logical_to_pspec(["batch"])
+    bax = bspec[0] if len(bspec) else None
+    assert bax != "pod" and (not isinstance(bax, tuple) or "pod" not in bax), \
+        "pipeline mode: batch must not shard over 'pod' (use kind='train_pp')"
+
+    # partial-manual shard_map: specs may only name the manual axis ('pod');
+    # data/model shardings of x pass through the auto axes untouched
+    in_specs = (
+        jax.tree.map(lambda l: _pspec_with_pod_stage(l.ndim), params_stack),
+        P(*([None] * x.ndim)),
+    )
+    out_specs = P(*([None] * x.ndim))
+
+    def body(pl, xb):
+        sid = jax.lax.axis_index("pod")
+        mb = xb.reshape(M, B // M, *xb.shape[1:])
+        # pin the microbatch/queue buffers' batch dim to the data axis:
+        # without this XLA auto-shards the tick-loop state over M and the
+        # 512-way partitioner trips on the reshard (hard crash on XLA:CPU)
+        baxes = [None, "batch"] + [None] * (xb.ndim - 1)
+        mb = shard(mb, *baxes)
+        state = shard(jnp.zeros_like(mb[0]), "batch",
+                      *([None] * (xb.ndim - 1)))
+        outs = shard(jnp.zeros_like(mb), *baxes)
+
+        def stage_fn(h):
+            def step(c, psl):
+                return one_repeat(c, psl), None
+            h, _ = jax.lax.scan(step, h, pl)
+            return h
+
+        def tick(carry, t):
+            state, outs = carry
+            inject = mb[jnp.clip(t, 0, M - 1)]
+            cur = jnp.where(sid == 0, inject, state)
+            y = stage_fn(cur)
+            perm = [(i, i + 1) for i in range(stages - 1)]
+            nxt = jax.lax.ppermute(y, "pod", perm)
+            oi = jnp.clip(t - (stages - 1), 0, M - 1)
+            take = jnp.logical_and(sid == stages - 1, t >= stages - 1)
+            outs = outs.at[oi].set(jnp.where(take, y, outs[oi]))
+            return (nxt, outs), None
+
+        (state, outs), _ = jax.lax.scan(
+            tick, (state, outs), jnp.arange(M + stages - 1, dtype=jnp.int32))
+        # only the last stage holds real outputs; masked psum replicates them
+        outs = jax.lax.psum(
+            jnp.where(sid == stages - 1, outs, jnp.zeros_like(outs)), "pod")
+        return outs.reshape(B, *xb.shape[1:])
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, axis_names={"pod"},
+                       check_vma=False)
+    return fn(params_stack, x)

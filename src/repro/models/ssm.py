@@ -1,0 +1,207 @@
+"""Mamba2 block — SSD (state-space duality) with chunked computation.
+
+Train/prefill uses the chunked SSD formulation (intra-chunk quadratic block +
+inter-chunk state recurrence over ``lax.scan``): MXU-friendly matmuls, O(S)
+memory, and the honest FLOPs count for the dry-run roofline.  Decode is the
+O(1)-per-token recurrent step on (conv, ssm) state.
+
+``attn_impl == "pallas"`` routes the inner SSD chunk computation through the
+``repro.kernels.ssd_scan`` TPU kernel (same math, VMEM-tiled).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import shard
+from .params import ParamStore
+
+SSD_CHUNK = 256
+
+
+def init_mamba(ps: ParamStore, path: str, cfg: ModelConfig,
+               stacked: Optional[int]):
+    D = cfg.d_model
+    Din = cfg.d_inner                      # expand * d_model
+    H = cfg.ssm_heads                      # Din // head_dim
+    N = cfg.ssm_state
+    conv_ch = Din + 2 * N                  # x, B, C are convolved
+    pre = (stacked,) if stacked else ()
+    pax = (None,) if stacked else ()
+    # split projections so each output dim shards cleanly over `model`
+    # (the fused width 2·Din+2·N+H is generally not divisible by 16)
+    ps.param(f"{path}/in_z", pre + (D, Din), pax + ("fsdp", "model"), "fan_in")
+    ps.param(f"{path}/in_xbc", pre + (D, conv_ch), pax + ("fsdp", "model"), "fan_in")
+    ps.param(f"{path}/in_dt", pre + (D, H), pax + ("fsdp", None), "fan_in")
+    ps.param(f"{path}/conv_w", pre + (cfg.conv_width, conv_ch), pax + (None, "model"),
+             "normal", scale=0.1)
+    ps.param(f"{path}/conv_b", pre + (conv_ch,), pax + ("model",), "zeros")
+    ps.param(f"{path}/A_log", pre + (H,), pax + (None,), "zeros", dtype=jnp.float32)
+    ps.param(f"{path}/D", pre + (H,), pax + (None,), "ones", dtype=jnp.float32)
+    ps.param(f"{path}/dt_bias", pre + (H,), pax + (None,), "zeros", dtype=jnp.float32)
+    ps.param(f"{path}/norm", pre + (Din,), pax + ("model",), "ones", dtype=jnp.float32)
+    ps.param(f"{path}/out_proj", pre + (Din, D), pax + ("model", "fsdp"), "fan_in")
+
+
+def _in_proj(p, x: jax.Array):
+    dt_ = x.dtype
+    z = jnp.einsum("...d,dm->...m", x, p["in_z"].astype(dt_))
+    xBC = jnp.einsum("...d,dm->...m", x, p["in_xbc"].astype(dt_))
+    dtr = jnp.einsum("...d,dm->...m", x, p["in_dt"].astype(dt_))
+    return z, xBC, dtr
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq.  x: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pad[:, k:k + x.shape[1], :] * w[k].astype(x.dtype) for k in range(K))
+    return y + b.astype(x.dtype)
+
+
+def _gated_rmsnorm(y: jax.Array, z: jax.Array, w: jax.Array,
+                   eps: float) -> jax.Array:
+    dt = y.dtype
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(var + eps) * w).astype(dt)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None, use_kernel: bool = False):
+    """Chunked SSD.  x:(B,L,H,P) dt:(B,L,H) A:(H,) Bm,Cm:(B,L,N).
+
+    Returns (y, h_last) with y:(B,L,H,P), h_last:(B,H,P,N).
+    h_t = h_{t-1}·exp(A·dt_t) + dt_t·x_t⊗B_t ;  y_t = h_t·C_t
+    """
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = L // chunk
+    assert nc * chunk == L, f"L={L} not divisible by chunk={chunk}"
+    dtt = x.dtype
+
+    xc = x.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, chunk, N)
+    Cc = Cm.reshape(B, nc, chunk, N)
+
+    dA = dtc * A                                           # (B,nc,c,H) f32, <=0
+    cs = jnp.cumsum(dA, axis=2)                            # inclusive cumsum
+
+    if use_kernel:
+        from ..kernels import ops as kops
+        return kops.ssd_scan(xc, dtc, dA, cs, Bc, Cc, h0=h0)
+
+    # ---- intra-chunk (diagonal block) -------------------------------------
+    # decay(i, j) = exp(cs_i - cs_j) for i >= j  (per head)
+    di = cs[:, :, :, None, :] - cs[:, :, None, :, :]       # (B,nc,c,c,H)
+    mask = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(di), 0.0)
+    att = jnp.einsum("bzin,bzjn->bzij", Cc.astype(jnp.float32),
+                     Bc.astype(jnp.float32))               # (B,nc,c,c)
+    w = att[..., None] * decay * dtc[:, :, None, :, :]     # (B,nc,c,c,H)
+    y_diag = jnp.einsum("bzijh,bzjhp->bzihp", w.astype(dtt), xc)
+
+    # ---- chunk summary states ---------------------------------------------
+    # S_z = sum_j exp(cs_last - cs_j) dt_j  B_j ⊗ x_j      (B,nc,H,P,N)
+    seg = jnp.exp(cs[:, :, -1:, :] - cs) * dtc             # (B,nc,c,H)
+    states = jnp.einsum("bzch,bzchp,bzcn->bzhpn", seg.astype(dtt), xc, Bc)
+
+    # ---- inter-chunk recurrence (scan over nc) ----------------------------
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                 # (B,nc,H)
+    h_init = (jnp.zeros((B, H, P, N), dtt) if h0 is None else h0.astype(dtt))
+
+    def step(h, inp):
+        dcy, s = inp                                       # (B,H) , (B,H,P,N)
+        h_new = h * dcy[..., None, None].astype(dtt) + s
+        return h_new, h
+
+    (h_last, h_prevs) = jax.lax.scan(
+        step, h_init, (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    h_prev = h_prevs.transpose(1, 0, 2, 3, 4)              # state entering chunk
+
+    # ---- inter-chunk contribution  y_off = C_i · exp(cs_i) · h_prev -------
+    inter = jnp.exp(cs)                                    # (B,nc,c,H) f32
+    y_off = jnp.einsum("bzcn,bzch,bzhpn->bzchp", Cc,
+                       inter.astype(dtt), h_prev)
+    y = (y_diag + y_off).reshape(B, L, H, P)
+    return y, h_last
+
+
+def apply_mamba(p, cfg: ModelConfig, x: jax.Array, chunk: int = SSD_CHUNK,
+                return_cache: bool = False):
+    """Train/prefill forward.  x: (B,S,D) -> (B,S,D) [+ decode cache]."""
+    B, S, D = x.shape
+    Din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    dt_ = x.dtype
+
+    z, xBC, dtr = _in_proj(p, x)
+    xBC = shard(xBC, "batch", None, "model")
+    xBC_conv = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm = (xBC_conv[..., :Din], xBC_conv[..., Din:Din + N],
+                  xBC_conv[..., Din + N:])
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                # (H,) negative
+
+    xh = xs.reshape(B, S, H, P)
+    y, h_last = ssd_chunked(xh, dt, A, Bm, Cm, min(chunk, S),
+                            use_kernel=(cfg.attn_impl == "pallas"))
+    y = y + xh * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, Din)
+    y = _gated_rmsnorm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsm,md->bsd", y, p["out_proj"].astype(dt_))
+    out = shard(out, "batch", None, None)
+    if not return_cache:
+        return out
+    K = cfg.conv_width
+    cache = {"conv": xBC[:, S - (K - 1):, :],               # pre-activation taps
+             "ssm": h_last.astype(jnp.float32)}
+    return out, cache
+
+
+# ---------------------------------------------------------------- decode
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, abstract: bool = False) -> Dict:
+    Din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    conv_ch = Din + 2 * N
+    dt = jnp.dtype(cfg.dtype)
+    shapes = {
+        "conv": ((batch, cfg.conv_width - 1, conv_ch), dt),
+        "ssm": ((batch, H, P, N), jnp.float32),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+
+
+def decode_mamba(p, cfg: ModelConfig, x: jax.Array, cache: Dict):
+    """One-token step.  x: (B,1,D) -> (B,1,D), updated cache."""
+    B = x.shape[0]
+    Din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    dt_ = x.dtype
+
+    z, xBC, dtr = _in_proj(p, x)
+    xBC = xBC[:, 0]                                         # (B, conv_ch)
+
+    conv_hist = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)
+    w = p["conv_w"].astype(dt_)                             # (K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", conv_hist, w) + p["conv_b"].astype(dt_)
+    xBC_t = jax.nn.silu(conv_out)
+    xs, Bm, Cm = (xBC_t[..., :Din], xBC_t[..., Din:Din + N],
+                  xBC_t[..., Din + N:])
+
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])                                # (H,)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                 # (B,H)
+    upd = (dt[..., None, None] * xh[..., None]
+           * Bm.astype(jnp.float32)[:, None, None, :])      # (B,H,P,N)
+    h = cache["ssm"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, Din).astype(dt_)
+    y = _gated_rmsnorm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsm,md->bsd", y, p["out_proj"].astype(dt_))
+    return out, {"conv": conv_hist[:, 1:, :], "ssm": h}

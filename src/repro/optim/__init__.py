@@ -1,0 +1,8 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, apply_updates
+from .schedule import cosine_schedule
+from .compression import (compress_int8, decompress_int8, ef_compress_grads,
+                          ef_init)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "apply_updates",
+           "cosine_schedule", "compress_int8", "decompress_int8",
+           "ef_compress_grads"]

@@ -1,0 +1,61 @@
+"""Gradient compression: int8 quantisation with error feedback.
+
+At 1000+ nodes the cross-pod (DCN) gradient all-reduce dominates step time
+for pure-DP layouts; int8 with per-tensor scale cuts those bytes 4× vs f32
+(2× vs bf16).  Error feedback (residual carried to the next step) keeps the
+quantisation noise unbiased-in-the-limit; convergence is validated in
+``tests/test_optim.py``.
+
+Usage inside a train step (flag-controlled):
+    g_q, new_err = ef_compress_grads(grads, err)     # quantise + EF
+    # all-reduce happens on the int8 tree via psum/pjit resharding
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def compress_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8.  Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def ef_compress_grads(grads: Pytree, err: Pytree) -> Tuple[Pytree, Pytree]:
+    """Quantise (grads + err) to int8, return (dequantised grads, new err).
+
+    The returned grads are what the optimizer sees (post round-trip, i.e.
+    exactly what the wire carried); new err = input − round-trip.
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = compress_int8(gf)
+        rt = decompress_int8(q, s)
+        return rt.astype(g.dtype), gf - rt
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = td.flatten_up_to(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (td.unflatten([o[0] for o in outs]),
+            td.unflatten([o[1] for o in outs]))
+
+
+def ef_init(params: Pytree, abstract: bool = False) -> Pytree:
+    def z(p):
+        if abstract:
+            return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+    return jax.tree.map(z, params)

@@ -1,0 +1,123 @@
+"""Batched serving engine: prefill + greedy decode with slot-based
+continuous batching.
+
+The engine keeps a fixed number of batch *slots* (the jit shape); requests
+are admitted into free slots, prefilled, and decoded step-by-step; finished
+slots are recycled without recompiling.  Slots decode at their OWN positions
+(the model's decode path takes a per-slot position vector).  Request arrivals
+can be driven by the DS3 job generator (``repro.core.jobgen``) — the paper's
+workload model feeding its pod-scale twin.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 16
+    arrival_s: float = 0.0
+    # filled by the engine:
+    output: Optional[List[int]] = None
+    finish_s: Optional[float] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.finish_s is None else self.finish_s - self.arrival_s
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, num_slots: int = 4,
+                 max_len: int = 512, eos_id: Optional[int] = None):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.S = num_slots
+        self.max_len = max_len
+        self.eos = eos_id
+        self.cache = model.init_cache(num_slots, max_len)
+        self.pos = np.zeros(num_slots, dtype=np.int32)    # next write position
+        self.active: List[Optional[Request]] = [None] * num_slots
+        self.last_tok = np.zeros(num_slots, dtype=np.int32)
+        self.ticks = 0
+
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len))
+
+    # ---------------------------------------------------------------- admit
+    def _admit(self, req: Request, slot: int):
+        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+        logits, cache1 = self._prefill(self.params, batch)
+        self.cache = jax.tree_util.tree_map_with_path(
+            lambda path, buf, new: _scatter_slot(
+                buf, new, slot,
+                stacked=any(getattr(k, "key", None) == "stack" for k in path)),
+            self.cache, cache1)
+        self.pos[slot] = len(req.prompt)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        req.output = [nxt]
+        self.last_tok[slot] = nxt
+        self.active[slot] = req
+
+    # ---------------------------------------------------------------- step
+    def step(self):
+        """One decode tick for all active slots (per-slot positions)."""
+        act = [i for i, r in enumerate(self.active) if r is not None]
+        if not act:
+            return
+        toks = jnp.asarray(self.last_tok[:, None])
+        pos = jnp.asarray(self.pos)                       # (S,) per-slot
+        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+        self.ticks += 1
+        now = time.time() - getattr(self, "_t0", 0.0)   # engine-relative clock
+        for i in act:
+            r = self.active[i]
+            nxt = int(jnp.argmax(logits[i, -1]))
+            r.output.append(nxt)
+            self.last_tok[i] = nxt
+            self.pos[i] += 1
+            done = (len(r.output) >= r.max_new_tokens
+                    or (self.eos is not None and nxt == self.eos)
+                    or self.pos[i] >= self.max_len - 1)
+            if done:
+                r.finish_s = now
+                self.active[i] = None
+
+    # ---------------------------------------------------------------- run
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Process requests to completion (arrival-ordered admission)."""
+        pending = sorted(requests, key=lambda r: r.arrival_s)
+        t0 = time.time()
+        self._t0 = t0
+        while pending or any(r is not None for r in self.active):
+            now = time.time() - t0
+            for i in range(self.S):
+                if self.active[i] is None and pending and \
+                        pending[0].arrival_s <= now:
+                    self._admit(pending.pop(0), i)
+            if any(r is not None for r in self.active):
+                self.step()
+            elif pending:
+                time.sleep(min(0.001, pending[0].arrival_s - now))
+        return requests
+
+
+def _scatter_slot(buf: jax.Array, new: jax.Array, slot: int,
+                  stacked: bool) -> jax.Array:
+    """Write request-cache ``new`` (batch=1) into slot ``slot`` of ``buf``.
+
+    Scan-stacked leaves are (R, B, ...) vs new (R, 1, ...); tail leaves are
+    (B, ...) vs (1, ...)."""
+    if stacked:
+        return buf.at[:, slot].set(new[:, 0].astype(buf.dtype))
+    return buf.at[slot].set(new[0].astype(buf.dtype))
