@@ -1,9 +1,5 @@
 """Paper §2 DTPM capability: energy/latency trade-off across DVFS governors
 (the power/thermal exploration the framework exists to enable)."""
-import time
-
-import numpy as np
-
 from repro.core import (get_governor, get_scheduler, make_soc_table2,
                         poisson_trace, simulate, thermal, wifi_tx)
 
@@ -21,10 +17,10 @@ def run():
         rows.append((f"dtpm/{gov}/energy", res.energy.total_energy_mj,
                      "total_mj"))
         rows.append((f"dtpm/{gov}/power", res.energy.avg_power_w, "avg_W"))
-        # steady-state temperature at this governor's average power split
-        p = np.array([res.energy.avg_power_w * 0.6,
-                      res.energy.avg_power_w * 0.2,
-                      res.energy.avg_power_w * 0.2])
+        # steady-state temperature at the power split the schedule realised
+        # (per-PE energy over the makespan, aggregated per thermal node)
+        p = thermal.node_power_split(db, res.energy.energy_per_pe_mj,
+                                     res.makespan_us)
         rows.append((f"dtpm/{gov}/t_steady", thermal.steady_state(p)[0],
                      "big_cluster_C"))
     return rows

@@ -189,8 +189,14 @@ def make_soc_table2(with_viterbi: bool = False) -> ResourceDB:
 
 def make_soc(num_big: int = 4, num_little: int = 4, num_scr: int = 2,
              num_fft: int = 4, num_vit: int = 0,
-             profiles: Optional[Mapping[str, Mapping[str, float]]] = None) -> ResourceDB:
-    """Arbitrary SoC configuration for design-space exploration."""
+             profiles: Optional[Mapping[str, Mapping[str, float]]] = None,
+             comm: Optional[CommModel] = None) -> ResourceDB:
+    """Arbitrary SoC configuration for design-space exploration.
+
+    ``comm`` overrides the interconnect model (e.g. a different cross-cluster
+    penalty per design point); cluster-frequency caps are applied when the
+    simulation tables are built (``build_tables`` + a userspace governor).
+    """
     pes: List[PE] = []
     idx = 0
     for i in range(num_big):
@@ -203,4 +209,5 @@ def make_soc(num_big: int = 4, num_little: int = 4, num_scr: int = 2,
         pes.append(PE(idx, ACC_FFT, 2, f"FFT-{i}")); idx += 1
     for i in range(num_vit):
         pes.append(PE(idx, ACC_VITERBI, 2, f"VIT-{i}")); idx += 1
-    return ResourceDB(pes, dict(profiles) if profiles else ALL_PROFILES)
+    return ResourceDB(pes, dict(profiles) if profiles else ALL_PROFILES,
+                      comm=comm)

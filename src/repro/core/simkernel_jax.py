@@ -41,7 +41,6 @@ BIG = jnp.float32(1e30)
 @dataclasses.dataclass(frozen=True)
 class SimTables:
     exec_us: jnp.ndarray        # (A, T, P) f32 — DVFS-scaled latency, BIG=unsupported
-    exec_raw: jnp.ndarray       # (A, T, P) f32 — unscaled (MET uses raw, like ref)
     pred: jnp.ndarray           # (A, T, T) bool
     ebytes: jnp.ndarray         # (A, T, T) f32 (bytes flowing t' -> t)
     valid: jnp.ndarray          # (A, T) bool
@@ -57,7 +56,7 @@ class SimTables:
 
 jax.tree_util.register_dataclass(
     SimTables,
-    data_fields=["exec_us", "exec_raw", "pred", "ebytes", "valid", "comm_mult",
+    data_fields=["exec_us", "pred", "ebytes", "valid", "comm_mult",
                  "comm_startup", "comm_inv_bw", "power_active", "power_idle",
                  "table_pe"],
     meta_fields=["t_max", "num_pes"],
@@ -66,11 +65,29 @@ jax.tree_util.register_dataclass(
 
 def build_tables(db: ResourceDB, apps: Sequence[Application],
                  governor: Optional[Governor] = None,
-                 table: Optional[Dict[Tuple[str, int], int]] = None) -> SimTables:
+                 table: Optional[Dict[Tuple[str, int], int]] = None,
+                 pad_tasks: Optional[int] = None,
+                 pad_pes: Optional[int] = None) -> SimTables:
+    """Build device-resident simulation tables for one SoC design.
+
+    ``pad_tasks`` / ``pad_pes`` pad the task and PE axes to a fixed size so
+    tables from *different* designs stack into one (D, …) batch (see
+    ``repro.dse.batch``).  Padding is inert by construction: padded task rows
+    are invalid (pre-scheduled), padded PE columns carry BIG latency (never
+    win an argmin) and zero active/idle power (no energy contribution).
+    """
     governor = governor or PerformanceGovernor()
     A = len(apps)
     T = max(a.num_tasks for a in apps)
     P = db.num_pes
+    if pad_tasks is not None:
+        if pad_tasks < T:
+            raise ValueError(f"pad_tasks={pad_tasks} < max tasks {T}")
+        T = pad_tasks
+    if pad_pes is not None:
+        if pad_pes < P:
+            raise ValueError(f"pad_pes={pad_pes} < num_pes {P}")
+        P = pad_pes
 
     freq = {}
     for pe in db.pes:
@@ -78,7 +95,6 @@ def build_tables(db: ResourceDB, apps: Sequence[Application],
             freq[pe.cluster] = governor.initial_freq(pe.pe_type)
 
     exec_us = np.full((A, T, P), 1e30, dtype=np.float32)
-    exec_raw = np.full((A, T, P), 1e30, dtype=np.float32)
     pred = np.zeros((A, T, T), dtype=bool)
     ebytes = np.zeros((A, T, T), dtype=np.float32)
     valid = np.zeros((A, T), dtype=bool)
@@ -91,7 +107,6 @@ def build_tables(db: ResourceDB, apps: Sequence[Application],
             for j, pe in enumerate(db.pes):
                 base = lat[t, j]
                 if np.isfinite(base):
-                    exec_raw[ai, t, j] = np.float32(base)
                     scale = (NOMINAL_FREQ[pe.pe_type] / freq[pe.cluster]
                              if pe.is_cpu else 1.0)
                     exec_us[ai, t, j] = np.float32(np.float32(base) * np.float32(scale))
@@ -101,8 +116,8 @@ def build_tables(db: ResourceDB, apps: Sequence[Application],
         ebytes[ai, :app.num_tasks, :app.num_tasks] = app.edge_bytes_matrix()
 
     comm_mult = np.zeros((P, P), dtype=np.float32)
-    for s in range(P):
-        for d in range(P):
+    for s in range(db.num_pes):
+        for d in range(db.num_pes):
             if s == d:
                 continue
             comm_mult[s, d] = (db.comm.cross_cluster_penalty
@@ -116,7 +131,7 @@ def build_tables(db: ResourceDB, apps: Sequence[Application],
         p_idle[j] = idle_power(pe)
 
     return SimTables(
-        exec_us=jnp.asarray(exec_us), exec_raw=jnp.asarray(exec_raw),
+        exec_us=jnp.asarray(exec_us),
         pred=jnp.asarray(pred), ebytes=jnp.asarray(ebytes),
         valid=jnp.asarray(valid),
         comm_mult=jnp.asarray(comm_mult),
@@ -140,7 +155,6 @@ def _simulate(tables: SimTables, policy: str, num_jobs: int,
     ebytes_j = tables.ebytes[app_idx]      # (J, T, T)
     valid_j = tables.valid[app_idx]        # (J, T)
     exec_j = tables.exec_us[app_idx]       # (J, T, P)
-    exec_raw_j = tables.exec_raw[app_idx]  # (J, T, P)
     table_j = tables.table_pe[app_idx]     # (J, T)
 
     total = J * T  # static iteration bound: one commit per real task

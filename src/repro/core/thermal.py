@@ -18,10 +18,45 @@ import numpy as np
 T_AMBIENT_C = 25.0
 
 # node order: [big cluster, LITTLE cluster, accel fabric, board]
+NODE_BIG, NODE_LITTLE, NODE_ACCEL = 0, 1, 2
+NUM_NODES = 3
 R_TO_BOARD = np.array([2.0, 4.0, 3.0], dtype=np.float64)     # K/W
 C_NODE = np.array([0.15, 0.05, 0.10], dtype=np.float64)      # J/K
 R_BOARD_AMB = 1.5                                            # K/W
 C_BOARD = 20.0                                               # J/K
+
+
+def cluster_nodes(db) -> np.ndarray:
+    """Map each PE of a ``ResourceDB`` to its thermal node index.
+
+    big CPUs -> NODE_BIG, LITTLE CPUs -> NODE_LITTLE, accelerators share the
+    NODE_ACCEL fabric node.
+    """
+    from .resources import CPU_BIG, CPU_LITTLE
+    out = np.empty(db.num_pes, dtype=np.int64)
+    for j, pe in enumerate(db.pes):
+        if pe.pe_type == CPU_BIG:
+            out[j] = NODE_BIG
+        elif pe.pe_type == CPU_LITTLE:
+            out[j] = NODE_LITTLE
+        else:
+            out[j] = NODE_ACCEL
+    return out
+
+
+def node_power_split(db, energy_per_pe_mj: np.ndarray,
+                     makespan_us: float) -> np.ndarray:
+    """Average per-thermal-node power (W) realised by a schedule.
+
+    Replaces any fixed big/LITTLE/accel split assumption: the split is derived
+    from the energy each PE actually consumed over the makespan.
+    """
+    # NB: EnergyReport.energy_per_pe_mj stores W·us · 1e-6 (i.e. joules) —
+    # same convention its avg_power_w is derived with, so no mJ factor here.
+    per_pe_w = (np.asarray(energy_per_pe_mj, dtype=np.float64)
+                / max(float(makespan_us) * 1e-6, 1e-12))
+    return np.bincount(cluster_nodes(db), weights=per_pe_w,
+                       minlength=NUM_NODES)[:NUM_NODES]
 
 
 @dataclasses.dataclass

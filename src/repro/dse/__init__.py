@@ -1,0 +1,27 @@
+"""repro.dse — batched design-space exploration over the JAX sim kernel.
+
+The paper positions system-level simulation as the enabler for "design space
+exploration and dynamic resource management"; this package is that mode:
+
+    space:       DesignSpace / DesignPoint — declarative SoC configurations
+                 with grid / random / latin-hypercube enumeration
+    batch:       pad + stack per-design SimTables into (D, …) tensors;
+                 designs × traces simulated in one vmapped jit
+    thermal_jax: lax.scan RC thermal co-simulation -> peak temp per design
+    pareto:      non-dominated sorting + crowding distance
+    search:      evaluate / successive_halving / pareto_search refinement
+    reports:     ASCII/CSV front reports + `python -m repro.dse.reports`
+"""
+from .batch import (DesignBatch, build_design_batch, simulate_design_batch,
+                    stack_tables, stack_traces)
+from .pareto import (crowding_distance, non_dominated_sort, pareto_mask,
+                     pareto_order)
+from .reports import format_front, front_csv
+from .search import (OBJECTIVES, EvalResult, SearchResult, evaluate,
+                     pareto_search, successive_halving)
+from .space import AREA_MM2, AXES, DesignPoint, DesignSpace
+from .thermal_jax import (binned_power_trace, peak_temperature,
+                          peak_temperature_grid, steady_state,
+                          transient_trace)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,109 @@
+"""Stack per-design simulation tables into one (D, …) tensor program.
+
+Designs differ in PE count, so every per-design :class:`SimTables` is built
+padded to the fleet-wide maximum (``build_tables(pad_pes=…)``) and the padded
+tables are stacked leaf-wise into a single pytree whose data fields carry a
+leading design axis.  Padding is inert by construction (BIG latency, zero
+power — see DESIGN.md §5), so the batched kernel needs **no masking logic**:
+``jax.vmap`` over the design axis × the trace axis runs designs × seeds ×
+injection rates in one ``jit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.applications import Application
+from ..core.jobgen import JobTrace
+from ..core.simkernel_jax import SimTables, _simulate, build_tables
+from ..core.thermal import NODE_ACCEL, cluster_nodes
+from .space import DesignPoint
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignBatch:
+    """D stacked designs ready for batched simulation.
+
+    No per-PE mask is stored: padding is inert inside the kernel (DESIGN.md
+    §5), and consumers slice per-design outputs with ``points[d].num_pes``.
+    """
+    points: Tuple[DesignPoint, ...]
+    tables: SimTables                 # data fields carry a leading (D, …) axis
+    node_of_pe: jnp.ndarray           # (D, P) i32 thermal node per PE slot
+
+    @property
+    def num_designs(self) -> int:
+        return len(self.points)
+
+
+def stack_tables(tables: Sequence[SimTables]) -> SimTables:
+    """Leaf-wise stack of identically-shaped SimTables into (D, …) tensors."""
+    shapes = {(t.t_max, t.num_pes) for t in tables}
+    if len(shapes) != 1:
+        raise ValueError(f"tables must be padded to one shape, got {shapes}")
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *tables)
+
+
+def build_design_batch(points: Sequence[DesignPoint],
+                       apps: Sequence[Application],
+                       pad_pes: Optional[int] = None) -> DesignBatch:
+    """Build + pad + stack the simulation tables for a list of designs."""
+    if not points:
+        raise ValueError("empty design list")
+    dbs = [p.to_db() for p in points]
+    P = max(db.num_pes for db in dbs)
+    if pad_pes is not None:
+        if pad_pes < P:
+            raise ValueError(f"pad_pes={pad_pes} < widest design {P}")
+        P = pad_pes
+    per_design = [build_tables(db, apps, governor=p.governor(), pad_pes=P)
+                  for p, db in zip(points, dbs)]
+    nodes = np.full((len(dbs), P), NODE_ACCEL, dtype=np.int32)  # pad: inert,
+    # zero-power slots, binned to the accel node by convention
+    for i, db in enumerate(dbs):
+        nodes[i, :db.num_pes] = cluster_nodes(db)
+    return DesignBatch(points=tuple(points), tables=stack_tables(per_design),
+                       node_of_pe=jnp.asarray(nodes))
+
+
+def stack_traces(traces: Sequence[JobTrace]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(S, J) arrival / app-index tensors from S equal-length job traces."""
+    lens = {t.num_jobs for t in traces}
+    if len(lens) != 1:
+        raise ValueError(f"traces must have equal job counts, got {lens}")
+    arr = jnp.asarray(np.stack([t.arrival_us for t in traces]), jnp.float32)
+    idx = jnp.asarray(np.stack([t.app_index for t in traces]), jnp.int32)
+    return arr, idx
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "num_jobs"))
+def _simulate_grid(tables: SimTables, policy: str, num_jobs: int,
+                   arrival: jnp.ndarray, app_idx: jnp.ndarray):
+    """(D designs) × (S traces) simulations as one tensor program."""
+    per_trace = jax.vmap(
+        lambda tb, a, i: _simulate(tb, policy, num_jobs, a, i),
+        in_axes=(None, 0, 0))                      # map traces, share design
+    per_design = jax.vmap(per_trace, in_axes=(0, None, None))
+    return per_design(tables, arrival, app_idx)
+
+
+def simulate_design_batch(batch: DesignBatch, policy: str,
+                          arrival: jnp.ndarray, app_idx: jnp.ndarray) -> Dict:
+    """Run all designs × traces in one jitted call.
+
+    ``arrival``/``app_idx``: (S, J) as from :func:`stack_traces`.  Every entry
+    of the returned dict gains leading (D, S) axes over ``simulate_jax``'s
+    output — e.g. ``avg_job_latency_us`` is (D, S), ``busy_per_pe_us`` is
+    (D, S, P).
+    """
+    arrival = jnp.asarray(arrival, jnp.float32)
+    app_idx = jnp.asarray(app_idx, jnp.int32)
+    if arrival.ndim != 2:
+        raise ValueError("arrival must be (num_traces, num_jobs)")
+    return _simulate_grid(batch.tables, policy, int(arrival.shape[1]),
+                          arrival, app_idx)

@@ -1,0 +1,209 @@
+"""Batched design-space evaluation + Pareto refinement loop.
+
+``evaluate`` turns a list of design points into (latency, energy, peak-temp)
+objectives with ONE jitted tensor program per scheduler policy: designs are
+stacked (``repro.dse.batch``), traces are stacked, the schedule kernel vmaps
+over both axes and the RC thermal scan rides in the same jit.
+
+``pareto_search`` is the refinement loop (DS3-journal style DSE): seed a
+latin-hypercube batch, keep a cross-round archive, and re-seed each next
+batch from the current non-dominated front's neighborhood (one-axis moves)
+plus random immigrants.  ``successive_halving`` optionally triages each
+batch on a trace subset before paying for the full evaluation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.applications import Application
+from ..core.jobgen import JobTrace
+from ..core.simkernel_jax import SimTables
+from .batch import (DesignBatch, _simulate_grid, build_design_batch,
+                    stack_traces)
+from .pareto import pareto_mask, pareto_order
+from .space import DesignPoint, DesignSpace
+from .thermal_jax import peak_temperature_grid
+
+OBJECTIVES = ("avg_latency_us", "energy_mj", "peak_temp_c")
+
+
+@dataclasses.dataclass
+class EvalResult:
+    """Objectives for D designs, averaged/maxed over S traces."""
+    points: Tuple[DesignPoint, ...]
+    avg_latency_us: np.ndarray        # (D,) mean over traces
+    energy_mj: np.ndarray             # (D,) mean over traces
+    peak_temp_c: np.ndarray           # (D,) max over traces
+    latency_per_trace: np.ndarray     # (D, S)
+    energy_per_trace: np.ndarray      # (D, S)
+    temp_per_trace: np.ndarray        # (D, S)
+
+    @property
+    def num_designs(self) -> int:
+        return len(self.points)
+
+    def objectives(self) -> np.ndarray:
+        """(D, 3) cost matrix (all minimised) in OBJECTIVES order."""
+        return np.stack([self.avg_latency_us, self.energy_mj,
+                         self.peak_temp_c], axis=1)
+
+    def front_mask(self) -> np.ndarray:
+        return pareto_mask(self.objectives())
+
+
+def _concat(a: "EvalResult", b: "EvalResult") -> "EvalResult":
+    return EvalResult(
+        points=a.points + b.points,
+        avg_latency_us=np.concatenate([a.avg_latency_us, b.avg_latency_us]),
+        energy_mj=np.concatenate([a.energy_mj, b.energy_mj]),
+        peak_temp_c=np.concatenate([a.peak_temp_c, b.peak_temp_c]),
+        latency_per_trace=np.concatenate([a.latency_per_trace,
+                                          b.latency_per_trace]),
+        energy_per_trace=np.concatenate([a.energy_per_trace,
+                                         b.energy_per_trace]),
+        temp_per_trace=np.concatenate([a.temp_per_trace, b.temp_per_trace]))
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "num_jobs", "bins",
+                                             "repeats"))
+def _evaluate_grid(tables: SimTables, node_of_pe: jnp.ndarray,
+                   arrival: jnp.ndarray, app_idx: jnp.ndarray,
+                   policy: str, num_jobs: int, bins: int, repeats: int):
+    """Schedule simulation + thermal scan fused into ONE compiled program."""
+    out = _simulate_grid(tables, policy, num_jobs, arrival, app_idx)
+    temps = peak_temperature_grid(out, node_of_pe, tables.power_active,
+                                  tables.power_idle, bins=bins,
+                                  repeats=repeats)
+    return out, temps
+
+
+def evaluate(points: Sequence[DesignPoint], apps: Sequence[Application],
+             traces: Sequence[JobTrace], policy: str = "etf",
+             thermal_bins: int = 32, thermal_repeats: int = 3,
+             pad_pes: Optional[int] = None,
+             batch: Optional[DesignBatch] = None) -> EvalResult:
+    """Evaluate D designs × S traces in one vmapped/jitted call per policy.
+
+    ``pad_pes`` fixes the padded PE width so successive calls with different
+    design mixes reuse the same compiled program (jit cache hit).
+    """
+    if batch is None:
+        batch = build_design_batch(points, apps, pad_pes=pad_pes)
+    elif tuple(points) != batch.points:
+        raise ValueError("points does not match batch.points — pass the same "
+                         "design list the batch was built from")
+    arrival, app_idx = stack_traces(traces)
+    out, temps = _evaluate_grid(batch.tables, batch.node_of_pe,
+                                arrival, app_idx, policy=policy,
+                                num_jobs=int(arrival.shape[1]),
+                                bins=thermal_bins, repeats=thermal_repeats)
+    lat = np.asarray(out["avg_job_latency_us"], np.float64)       # (D, S)
+    energy = np.asarray(out["energy_mj"], np.float64)             # (D, S)
+    temps = np.asarray(temps, np.float64)                         # (D, S)
+    return EvalResult(points=tuple(batch.points),
+                      avg_latency_us=lat.mean(axis=1),
+                      energy_mj=energy.mean(axis=1),
+                      peak_temp_c=temps.max(axis=1),
+                      latency_per_trace=lat, energy_per_trace=energy,
+                      temp_per_trace=temps)
+
+
+def successive_halving(points: Sequence[DesignPoint],
+                       apps: Sequence[Application],
+                       traces: Sequence[JobTrace], policy: str = "etf",
+                       eta: int = 2, min_survivors: int = 4,
+                       pad_pes: Optional[int] = None,
+                       **eval_kw) -> EvalResult:
+    """Triaged evaluation: rank all candidates on ONE trace, keep the best
+    1/eta (by Pareto order) for the full-trace evaluation.  Returns the full
+    result for survivors only — a cheap filter in front of ``evaluate``."""
+    if len(traces) <= 1 or len(points) <= min_survivors:
+        return evaluate(points, apps, traces, policy, pad_pes=pad_pes,
+                        **eval_kw)
+    cheap = evaluate(points, apps, traces[:1], policy, pad_pes=pad_pes,
+                     **eval_kw)
+    keep = max(min_survivors, len(points) // eta)
+    order = pareto_order(cheap.objectives())[:keep]
+    survivors = [points[i] for i in sorted(order)]
+    return evaluate(survivors, apps, traces, policy, pad_pes=pad_pes,
+                    **eval_kw)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    archive: EvalResult               # every design ever fully evaluated
+    front: np.ndarray                 # bool mask over the archive
+    rounds: List[Dict]                # per-round stats (evaluated, front size)
+
+    def front_points(self) -> List[Tuple[DesignPoint, np.ndarray]]:
+        obj = self.archive.objectives()
+        idx = [i for i in np.flatnonzero(self.front)]
+        order = pareto_order(obj[self.front])
+        return [(self.archive.points[idx[i]], obj[idx[i]]) for i in order]
+
+
+def pareto_search(space: DesignSpace, apps: Sequence[Application],
+                  traces: Sequence[JobTrace], policy: str = "etf",
+                  rounds: int = 4, batch_size: int = 32, seed: int = 0,
+                  budget_mm2: Optional[float] = None, halving: bool = False,
+                  pad_pes: Optional[int] = None, **eval_kw) -> SearchResult:
+    """Evolutionary Pareto refinement over ``space``.
+
+    Round 0 seeds a latin-hypercube batch; each later round mutates the
+    current front (all one-axis neighbour moves, crowding-ordered) and tops
+    up with unseen random immigrants, so the batch stays ``batch_size`` wide
+    and every vmapped evaluation is full.  Deterministic for a given seed.
+    """
+    if pad_pes is None:
+        # widest possible design in this space -> one compiled program
+        pad_pes = (max(space.num_big) + max(space.num_little)
+                   + max(space.num_scr) + max(space.num_fft)
+                   + max(space.num_vit))
+    seen: set = set()
+    archive: Optional[EvalResult] = None
+    round_stats: List[Dict] = []
+    candidates = space.sample_lhs(batch_size, seed=seed,
+                                  budget_mm2=budget_mm2)
+    if not candidates:
+        raise ValueError(
+            f"no feasible designs in the space under budget_mm2={budget_mm2}")
+    for rnd in range(rounds):
+        candidates = [p for p in candidates if p not in seen]
+        if not candidates:
+            break
+        seen.update(candidates)
+        ev = (successive_halving(candidates, apps, traces, policy,
+                                 pad_pes=pad_pes, **eval_kw) if halving
+              else evaluate(candidates, apps, traces, policy,
+                            pad_pes=pad_pes, **eval_kw))
+        archive = ev if archive is None else _concat(archive, ev)
+        front = archive.front_mask()
+        round_stats.append(dict(round=rnd, evaluated=ev.num_designs,
+                                archive=archive.num_designs,
+                                front=int(front.sum())))
+        if rnd == rounds - 1:
+            break
+        # next generation: neighbourhood of the front, best-crowding first
+        front_idx = np.flatnonzero(front)
+        obj = archive.objectives()
+        ordered = pareto_order(obj[front])
+        nxt: List[DesignPoint] = []
+        for i in ordered:
+            for q in space.neighbors(archive.points[front_idx[i]]):
+                if q not in seen and q not in nxt:
+                    if budget_mm2 is None or q.area_mm2 <= budget_mm2:
+                        nxt.append(q)
+        # reserve at least a quarter of the batch for random immigrants
+        nxt = nxt[:max(1, batch_size - max(1, batch_size // 4))]
+        immigrants = space.sample_random(
+            batch_size - len(nxt), seed=seed + 1000 + rnd,
+            budget_mm2=budget_mm2, exclude=list(seen) + nxt)
+        candidates = nxt + immigrants
+    return SearchResult(archive=archive, front=archive.front_mask(),
+                        rounds=round_stats)

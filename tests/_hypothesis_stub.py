@@ -1,0 +1,29 @@
+"""Compat layer for ``hypothesis`` so its absence degrades gracefully.
+
+Re-exports the real ``given``/``settings``/``st`` when hypothesis is
+installed; otherwise provides shims under which ``@given``-decorated
+property tests are skipped while the deterministic tests in the same module
+still collect and run.  Install the real thing with ``pip install -e .[test]``.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    import pytest
+
+    class _Stub:
+        """Swallows any attribute access / call chain (st.integers().map())."""
+
+        def __call__(self, *args, **kwargs):
+            return _Stub()
+
+        def __getattr__(self, name):
+            return _Stub()
+
+    st = _Stub()
+
+    def given(*args, **kwargs):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed")(fn)
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn

@@ -5,7 +5,7 @@ roll back and reschedule on survivors — all jobs still complete, with
 degraded latency.  Mirrors the pod half's preemption/restart semantics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.core import (get_scheduler, make_soc_table2, poisson_trace,
                         simulate, wifi_tx)

@@ -6,7 +6,7 @@ integer-latency workloads, and to float tolerance in general.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.core import (TableScheduler, build_tables, deterministic_trace,
                         get_application, get_scheduler, make_soc_table2,

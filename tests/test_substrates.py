@@ -3,7 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.data import SyntheticLMPipeline
 from repro.optim import (AdamWConfig, adamw_init, adamw_update, compress_int8,
