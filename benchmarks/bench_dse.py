@@ -1,56 +1,39 @@
-"""DSE throughput: design-points/sec for the batched (vmap × vmap) evaluator
-vs a per-design loop — the scale story the dse subsystem exists for."""
+"""DSE throughput: design-points/sec for the batched (vmap × vmap) sweep
+vs a per-design ``run()`` loop — the scale story the dse subsystem exists
+for.  Both sides are declared through one ``Scenario``; both include the
+fused RC thermal co-simulation."""
 import time
 
-import numpy as np
-
-from repro.core import build_tables, get_application, poisson_trace, \
-    simulate_jax
-from repro.dse import (DesignSpace, build_design_batch, evaluate,
-                       peak_temperature_grid, simulate_design_batch,
-                       stack_traces)
+from repro.dse import DesignSpace, build_design_batch, evaluate
+from repro.scenario import Scenario, TraceSpec, run as run_scenario, sweep
 
 NUM_DESIGNS = 64
 NUM_TRACES = 4
 NUM_JOBS = 32
 RATE = 20.0
 POLICY = "etf"
-APPS = ["wifi_tx", "wifi_rx"]
+
+BASE = Scenario(apps=("wifi_tx", "wifi_rx"), scheduler=POLICY,
+                governor="design",
+                trace=TraceSpec(rate_jobs_per_ms=RATE, num_jobs=NUM_JOBS))
 
 
 def run():
-    apps = [get_application(n) for n in APPS]
-    traces = [poisson_trace(RATE, NUM_JOBS, APPS, seed=s)
-              for s in range(NUM_TRACES)]
     points = DesignSpace().sample_lhs(NUM_DESIGNS, seed=0)
+    seeds = list(range(NUM_TRACES))
+    axes = {"design": points, "seed": seeds}
     rows = []
 
-    # batched evaluator: cold (compile) and warm
-    batch = build_design_batch(points, apps)
-    arrival, app_idx = stack_traces(traces)
+    # one stacked design batch shared by the sweep and the Pareto front
+    batch = build_design_batch(points, BASE.applications())
+
+    # batched sweep: cold (compile) and warm
     t0 = time.perf_counter()
-    res = evaluate(points, apps, traces, policy=POLICY, batch=batch)
+    sweep(BASE, axes=axes, design_batch=batch)
     cold = time.perf_counter() - t0
-
-    def batched_once():
-        out = simulate_design_batch(batch, POLICY, arrival, app_idx)
-        temps = peak_temperature_grid(out, batch.node_of_pe,
-                                      batch.tables.power_active,
-                                      batch.tables.power_idle)
-        np.asarray(temps)                            # block until done
-
-    def batched_sim_only():
-        np.asarray(simulate_design_batch(batch, POLICY, arrival,
-                                         app_idx)["avg_job_latency_us"])
-
-    batched_once()     # compile the standalone (unfused) programs untimed
     t0 = time.perf_counter()
-    batched_once()
+    sweep(BASE, axes=axes, design_batch=batch)
     warm = time.perf_counter() - t0
-    batched_sim_only()
-    t0 = time.perf_counter()
-    batched_sim_only()
-    warm_sim = time.perf_counter() - t0
     rows.append(("dse/batched/cold", cold * 1e6 / NUM_DESIGNS,
                  "us_per_design_incl_compile"))
     rows.append(("dse/batched/warm", warm * 1e6 / NUM_DESIGNS,
@@ -58,18 +41,16 @@ def run():
     rows.append(("dse/batched/throughput", NUM_DESIGNS / warm,
                  "design_points_per_sec"))
 
-    # per-design loop on the same workload (the baseline being replaced);
-    # a subset is enough — each design re-jits for its own PE count, so
-    # time a second (warm) pass for the apples-to-apples speedup row
+    # per-design run() loop on the same workload (the baseline the batch
+    # replaces); a subset is enough — each design re-jits for its own PE
+    # count, so time a second (warm) pass for the apples-to-apples row
     subset = points[:8]
-    per_design_tables = [build_tables(p.to_db(), apps, governor=p.governor())
-                         for p in subset]
 
     def loop_once():
-        for tables in per_design_tables:
-            for tr in traces:
-                np.asarray(simulate_jax(tables, POLICY, tr.arrival_us,
-                                        tr.app_index)["avg_job_latency_us"])
+        for p in subset:
+            for s in seeds:
+                run_scenario(BASE.replace(design=p).with_seed(s),
+                             backend="jax")
 
     t0 = time.perf_counter()
     loop_once()                                      # compiles per design
@@ -81,11 +62,14 @@ def run():
                  "us_per_design_incl_compile"))
     rows.append(("dse/loop/warm", loop_warm * 1e6 / len(subset),
                  "us_per_design"))
-    # speedup compares simulation-only on both sides (the loop baseline has
-    # no thermal pass); dse/batched/warm above includes the thermal scan
     rows.append(("dse/speedup_vs_loop",
-                 (loop_warm / len(subset)) / (warm_sim / NUM_DESIGNS),
-                 "x_batched_warm_vs_loop_warm_sim_only"))
+                 (loop_warm / len(subset)) / (warm / NUM_DESIGNS),
+                 "x_batched_warm_vs_loop_warm"))
+
+    # Pareto front over the same scenario grid (facade-delegating evaluate)
+    traces = [BASE.with_seed(s).job_trace() for s in seeds]
+    res = evaluate(points, BASE.applications(), traces, policy=POLICY,
+                   batch=batch)
     rows.append(("dse/front_size", float(res.front_mask().sum()),
                  "non_dominated_designs"))
     return rows

@@ -1,25 +1,24 @@
 """Paper §2 DTPM capability: energy/latency trade-off across DVFS governors
 (the power/thermal exploration the framework exists to enable)."""
-from repro.core import (get_governor, get_scheduler, make_soc_table2,
-                        poisson_trace, simulate, thermal, wifi_tx)
+from repro.core import thermal
+from repro.scenario import Scenario, TraceSpec, run as run_scenario
+
+SCN = Scenario(apps=("wifi_tx",),
+               trace=TraceSpec(rate_jobs_per_ms=20.0, num_jobs=150, seed=0))
 
 
 def run():
-    db = make_soc_table2()
-    app = wifi_tx()
-    trace = poisson_trace(20.0, 150, ["wifi_tx"], seed=0)
+    db = SCN.soc()
     rows = []
     for gov in ["performance", "powersave", "ondemand"]:
-        res = simulate(db, [app], trace, get_scheduler("etf"),
-                       get_governor(gov))
-        rows.append((f"dtpm/{gov}/latency", res.avg_job_latency_us,
+        res = run_scenario(SCN.replace(governor=gov), backend="ref")
+        rows.append((f"dtpm/{gov}/latency", res.avg_latency_us,
                      "avg_job_latency_us"))
-        rows.append((f"dtpm/{gov}/energy", res.energy.total_energy_mj,
-                     "total_mj"))
-        rows.append((f"dtpm/{gov}/power", res.energy.avg_power_w, "avg_W"))
+        rows.append((f"dtpm/{gov}/energy", res.energy_j, "total_j"))
+        rows.append((f"dtpm/{gov}/power", res.avg_power_w, "avg_W"))
         # steady-state temperature at the power split the schedule realised
         # (per-PE energy over the makespan, aggregated per thermal node)
-        p = thermal.node_power_split(db, res.energy.energy_per_pe_mj,
+        p = thermal.node_power_split(db, res.energy_report.energy_per_pe_j,
                                      res.makespan_us)
         rows.append((f"dtpm/{gov}/t_steady", thermal.steady_state(p)[0],
                      "big_cluster_C"))

@@ -1,34 +1,29 @@
 """Paper Figure 3: average job execution time vs injection rate for
-MET / ETF / ILP-table schedulers on the Table-2 SoC (WiFi-TX workload)."""
+MET / ETF / ILP-table schedulers on the Table-2 SoC (WiFi-TX workload).
+
+All work is declared through one ``Scenario``; the rate × seed grid per
+scheduler is a single ``sweep(..., backend="ref")``.
+"""
 import time
 
-import numpy as np
-
-from repro.core import (TableScheduler, get_scheduler, make_soc_table2,
-                        poisson_trace, simulate, solve_optimal_table, wifi_tx)
+from repro.scenario import Scenario, TraceSpec, sweep
 
 RATES = [1, 5, 10, 20, 30, 40, 50, 60, 70, 80]
 NUM_JOBS = 120
 SEEDS = (0, 1, 2)
 
+BASE = Scenario(apps=("wifi_tx",), trace=TraceSpec(num_jobs=NUM_JOBS))
+
 
 def run():
-    db = make_soc_table2()
-    app = wifi_tx()
-    table = solve_optimal_table(db, app)
     rows = []
     curves = {}
-    for name, mk in [("met", lambda: get_scheduler("met")),
-                     ("etf", lambda: get_scheduler("etf")),
-                     ("ilp", lambda: TableScheduler(table))]:
+    for name, policy in [("met", "met"), ("etf", "etf"), ("ilp", "table")]:
+        scn = BASE.replace(scheduler=policy)
         t0 = time.perf_counter()
-        ys = []
-        for rate in RATES:
-            vals = [simulate(db, [app],
-                             poisson_trace(rate, NUM_JOBS, ["wifi_tx"], seed=s),
-                             mk()).avg_job_latency_us for s in SEEDS]
-            ys.append(float(np.mean(vals)))
+        sr = sweep(scn, axes={"rate": RATES, "seed": SEEDS}, backend="ref")
         dt = (time.perf_counter() - t0) * 1e6 / (len(RATES) * len(SEEDS))
+        ys = [float(v) for v in sr.avg_latency_us.mean(axis=1)]
         curves[name] = ys
         for rate, y in zip(RATES, ys):
             rows.append((f"fig3/{name}/rate{rate}", y, "avg_job_latency_us"))

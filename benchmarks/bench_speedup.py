@@ -1,49 +1,48 @@
 """Simulation-speed benchmark — the paper's '600× over gem5' story, redone
-for accelerators: one event-heap simulation vs the vectorised JAX kernel
-batched over a whole design-space sweep (seeds × injection rates)."""
+for accelerators: the event-heap reference kernel one scenario at a time vs
+the whole workload grid as ONE vmapped/jitted ``sweep`` (which also fuses
+the RC thermal co-simulation)."""
 import time
 
 import numpy as np
 
-from repro.core import (build_tables, get_scheduler, make_soc_table2,
-                        poisson_trace, simulate, simulate_batch, wifi_tx)
+from repro.scenario import Scenario, TraceSpec, run as run_scenario, sweep
 
 NUM_JOBS = 80
-BATCH = 64          # design points evaluated at once by the JAX kernel
+BATCH = 64          # workload points evaluated at once by the JAX kernel
+
+BASE = Scenario(apps=("wifi_tx",), scheduler="etf")
+SPECS = [TraceSpec(rate_jobs_per_ms=5.0 + 70.0 * i / BATCH,
+                   num_jobs=NUM_JOBS, seed=i) for i in range(BATCH)]
 
 
 def run():
-    db = make_soc_table2()
-    app = wifi_tx()
-    traces = [poisson_trace(5.0 + 70.0 * i / BATCH, NUM_JOBS, ["wifi_tx"],
-                            seed=i) for i in range(BATCH)]
+    # traces materialised once, outside every timed region
+    traces = [ts.materialize(BASE.app_names()) for ts in SPECS]
 
-    # reference event-heap kernel, one by one
+    # reference event-heap kernel, one scenario at a time
     t0 = time.perf_counter()
-    ref_lat = [simulate(db, [app], t, get_scheduler("etf")).avg_job_latency_us
-               for t in traces]
+    ref_lat = [run_scenario(BASE.replace(trace=ts), backend="ref",
+                            trace_override=tr).avg_latency_us
+               for ts, tr in zip(SPECS, traces)]
     t_ref = time.perf_counter() - t0
 
-    # vectorised kernel: one batched tensor program
-    tables = build_tables(db, [app])
-    arr = np.stack([t.arrival_us for t in traces])
-    idx = np.stack([t.app_index for t in traces])
-    out = simulate_batch(tables, "etf", arr, idx)        # includes jit compile
-    out["avg_job_latency_us"].block_until_ready()
+    # vectorised kernel: the full trace axis in one batched tensor program
+    sr = sweep(BASE, axes={"trace": traces})         # includes jit compile
     t0 = time.perf_counter()
-    out = simulate_batch(tables, "etf", arr, idx)
-    out["avg_job_latency_us"].block_until_ready()
+    sr = sweep(BASE, axes={"trace": traces})
     t_jax = time.perf_counter() - t0
 
-    agree = np.allclose(np.asarray(out["avg_job_latency_us"]),
-                        np.asarray(ref_lat), rtol=1e-3)
+    agree = np.allclose(sr.avg_latency_us, np.asarray(ref_lat), rtol=1e-3)
+    num_tasks = BASE.applications()[0].num_tasks
     per_sim_ref = t_ref / BATCH * 1e6
     per_sim_jax = t_jax / BATCH * 1e6
     return [
         ("speedup/ref_kernel", per_sim_ref, "us_per_simulation"),
-        ("speedup/jax_kernel_batched", per_sim_jax, "us_per_simulation"),
+        ("speedup/jax_kernel_batched", per_sim_jax,
+         "us_per_simulation_incl_thermal"),
         ("speedup/jax_over_ref", per_sim_ref / per_sim_jax,
          f"x_speedup(batch={BATCH},agree={agree})"),
         ("speedup/events_per_sec",
-         BATCH * NUM_JOBS * app.num_tasks / t_jax, "scheduled_tasks_per_s"),
+         BATCH * NUM_JOBS * num_tasks / t_jax, "scheduled_tasks_per_s"),
     ]

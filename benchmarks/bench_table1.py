@@ -1,13 +1,14 @@
 """Paper Table 1: WiFi-TX execution profiles on A7/A15/accelerators."""
 import time
 
-from repro.core import make_soc_table2, wifi_tx
 from repro.core.resources import ACC_FFT, ACC_SCRAMBLER, CPU_BIG, CPU_LITTLE
+from repro.scenario import Scenario
 
 
 def run():
-    db = make_soc_table2()
-    app = wifi_tx()
+    scn = Scenario(apps=("wifi_tx",))
+    db = scn.soc()
+    (app,) = scn.applications()
     rows = []
     t0 = time.perf_counter()
     for task in app.tasks:

@@ -1,9 +1,10 @@
 """Design-space exploration: 64 SoC designs × 4 traces in one jitted call.
 
 Sweeps a latin-hypercube sample of the big/LITTLE/accelerator design space
-under a WiFi TX+RX workload, prints the non-dominated
-(latency, energy, peak-temperature) front, then spot-checks three designs
-from the padded batch against per-design ``simulate_jax`` — bit-for-bit.
+under a WiFi TX+RX workload declared by one ``Scenario``, prints the
+non-dominated (latency, energy, peak-temperature) front, then spot-checks
+three designs from the padded batch against per-point
+``run(..., backend="jax")`` — bit-for-bit.
 
     PYTHONPATH=src python examples/dse_pareto.py
 """
@@ -11,53 +12,53 @@ import time
 
 import numpy as np
 
-from repro.core import build_tables, get_application, poisson_trace, \
-    simulate_jax
-from repro.dse import (DesignSpace, build_design_batch, evaluate,
-                       format_front, simulate_design_batch, stack_traces)
+from repro.dse import DesignSpace, evaluate, format_front
+from repro.scenario import Scenario, TraceSpec, run, sweep
+from repro.scenario.sweep import compile_count
 
 NUM_DESIGNS = 64
 NUM_TRACES = 4
 NUM_JOBS = 32
 RATE = 20.0          # jobs/ms
 POLICY = "etf"
-APPS = ["wifi_tx", "wifi_rx"]
+
+BASE = Scenario(apps=("wifi_tx", "wifi_rx"), scheduler=POLICY,
+                governor="design",
+                trace=TraceSpec(rate_jobs_per_ms=RATE, num_jobs=NUM_JOBS))
 
 
 def main():
-    apps = [get_application(n) for n in APPS]
-    traces = [poisson_trace(RATE, NUM_JOBS, APPS, seed=s)
-              for s in range(NUM_TRACES)]
-    space = DesignSpace()
-    points = space.sample_lhs(NUM_DESIGNS, seed=0)
-    batch = build_design_batch(points, apps)
+    points = DesignSpace().sample_lhs(NUM_DESIGNS, seed=0)
+    seeds = list(range(NUM_TRACES))
+    traces = [BASE.with_seed(s).job_trace() for s in seeds]
 
     t0 = time.perf_counter()
-    result = evaluate(points, apps, traces, policy=POLICY, batch=batch)
+    result = evaluate(points, BASE.applications(), traces, policy=POLICY)
     dt = time.perf_counter() - t0
     print(format_front(result))
     print(f"{NUM_DESIGNS} designs x {NUM_TRACES} traces "
           f"({NUM_DESIGNS * NUM_TRACES} simulations) in {dt:.2f}s "
           f"(incl. jit compile)\n")
 
-    # -- padded-batch vs per-design spot check (bit-for-bit) ---------------
-    arrival, app_idx = stack_traces(traces)
-    out = simulate_design_batch(batch, POLICY, arrival, app_idx)
+    # -- padded-sweep vs per-point run() spot check (bit-for-bit) ----------
+    n0 = compile_count[0]
+    sr = sweep(BASE, axes={"design": points, "seed": seeds})
+    print(f"sweep over design x seed: shape {sr.shape}, "
+          f"{compile_count[0] - n0} compiled program(s)")
     rng = np.random.default_rng(1)
     for d in rng.choice(NUM_DESIGNS, size=3, replace=False):
         p = points[d]
-        tables = build_tables(p.to_db(), apps, governor=p.governor())
         exact = True
-        for s, tr in enumerate(traces):
-            ref = simulate_jax(tables, POLICY, tr.arrival_us, tr.app_index)
-            for key in ("avg_job_latency_us", "makespan_us", "energy_mj"):
-                exact &= bool(np.asarray(out[key])[d, s]
-                              == np.asarray(ref[key]))
+        for s in seeds:
+            ref = run(BASE.replace(design=p).with_seed(s), backend="jax")
+            exact &= bool(sr.avg_latency_us[d, s] == ref.avg_latency_us)
+            exact &= bool(sr.makespan_us[d, s] == ref.makespan_us)
+            exact &= bool(sr.energy_j[d, s] == ref.energy_j)
             exact &= bool(np.all(
-                np.asarray(out["busy_per_pe_us"])[d, s, :p.num_pes]
-                == np.asarray(ref["busy_per_pe_us"])))
-        print(f"spot-check {p.label():>26}: padded-batch == per-design "
-              f"simulate_jax (bit-for-bit): {exact}")
+                sr.busy_per_pe_us[d, s, :p.num_pes]
+                == np.asarray(ref.raw["busy_per_pe_us"])))
+        print(f"spot-check {p.label():>26}: padded sweep == per-point "
+              f"run(backend='jax') (bit-for-bit): {exact}")
         assert exact, f"batched result diverged for {p.label()}"
 
 

@@ -1,46 +1,49 @@
-"""Quickstart: the paper in 60 seconds.
+"""Quickstart: the paper in 60 seconds — through the unified Scenario API.
 
-Simulates a WiFi-TX workload on the Table-2 SoC with all three built-in
-schedulers, prints the Fig-3 sweep, an ASCII Gantt chart, and energy numbers.
+One declarative ``Scenario`` wires SoC, workload, scheduler and governor;
+``run()`` simulates it, ``sweep()`` cross-products axes.  Prints the Fig-3
+sweep, an ASCII Gantt chart, and energy numbers.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
+from repro.core import reports
+from repro.scenario import Scenario, TraceSpec, run, sweep
 
-from repro.core import (TableScheduler, get_governor, get_scheduler,
-                        make_soc_table2, poisson_trace, reports, simulate,
-                        solve_optimal_table, wifi_tx)
+BASE = Scenario(apps=("wifi_tx",))
+RATES = [1, 10, 20, 40, 60, 80]
+SEEDS = [0, 1, 2]
 
 
 def main():
-    db = make_soc_table2()
-    app = wifi_tx()
-    table = solve_optimal_table(db, app)
+    db = BASE.soc()
+    table = BASE.replace(scheduler="table").schedule_table()
     print("ILP-optimal single-job table:",
           {t: db.pes[pe].name for (_, t), pe in sorted(table.items())}, "\n")
 
+    curves = {}
+    for policy in ["met", "etf", "table"]:
+        sr = sweep(BASE.replace(scheduler=policy),
+                   axes={"rate": RATES, "seed": SEEDS}, backend="ref")
+        curves[policy] = sr.avg_latency_us.mean(axis=1)
     print(f"{'rate (jobs/ms)':>15} {'MET':>9} {'ETF':>9} {'ILP':>9}   (avg job latency, us)")
-    for rate in [1, 10, 20, 40, 60, 80]:
-        row = []
-        for sched in [get_scheduler("met"), get_scheduler("etf"),
-                      TableScheduler(table)]:
-            vals = [simulate(db, [app],
-                             poisson_trace(rate, 100, ["wifi_tx"], seed=s),
-                             sched).avg_job_latency_us for s in range(3)]
-            row.append(np.mean(vals))
-        print(f"{rate:>15} {row[0]:>9.1f} {row[1]:>9.1f} {row[2]:>9.1f}")
+    for i, rate in enumerate(RATES):
+        print(f"{rate:>15} {curves['met'][i]:>9.1f} {curves['etf'][i]:>9.1f} "
+              f"{curves['table'][i]:>9.1f}")
 
     print("\nSchedule (ETF, first jobs) — one row per PE, digits = job id:")
-    res = simulate(db, [app], poisson_trace(30, 12, ["wifi_tx"], seed=0),
-                   get_scheduler("etf"))
-    print(reports.gantt_ascii(db, res, width=90))
+    res = run(BASE.replace(trace=TraceSpec(rate_jobs_per_ms=30, num_jobs=12)),
+              backend="ref")
+    print(reports.gantt_ascii(db, res.raw, width=90))
 
     for gov in ["performance", "powersave", "ondemand"]:
-        res = simulate(db, [app], poisson_trace(20, 100, ["wifi_tx"], seed=0),
-                       get_scheduler("etf"), get_governor(gov))
-        print(f"governor={gov:<12} latency={res.avg_job_latency_us:7.1f}us "
-              f"energy={res.energy.total_energy_mj:6.3f}mJ "
-              f"avg_power={res.energy.avg_power_w:5.2f}W")
+        res = run(BASE.replace(governor=gov,
+                               trace=TraceSpec(rate_jobs_per_ms=20,
+                                               num_jobs=100)),
+                  backend="ref")
+        print(f"governor={gov:<12} latency={res.avg_latency_us:7.1f}us "
+              f"energy={res.energy_j:8.5f}J "
+              f"avg_power={res.avg_power_w:5.2f}W "
+              f"T_steady_peak={res.peak_temp_c:5.1f}C")
 
 
 if __name__ == "__main__":

@@ -7,7 +7,13 @@ Public API:
     schedulers:   get_scheduler, register_scheduler, solve_optimal_table
     simkernel:    simulate (reference) / build_tables + simulate_jax (vectorised)
     power/thermal/dvfs: analytical models + governors
+
+Scenario-driven entry point: prefer ``repro.scenario`` — one declarative
+``Scenario`` plus ``run()``/``sweep()`` replaces wiring the pieces above by
+hand.  ``simulate`` / ``simulate_jax`` exported here are deprecation shims
+that delegate to the unchanged kernels.
 """
+from ._deprecation import deprecated_entry_point as _deprecated_entry_point
 from .applications import (Application, REFERENCE_APPS, Task, get_application,
                            pulse_doppler, range_detection, single_carrier,
                            wifi_rx, wifi_tx)
@@ -21,8 +27,24 @@ from .resources import (ACC_FFT, ACC_SCRAMBLER, ACC_VITERBI, CPU_BIG,
 from .schedulers import (ETFScheduler, METScheduler, SchedContext, Scheduler,
                          TableScheduler, available_schedulers, get_scheduler,
                          register_scheduler, solve_optimal_table)
-from .simkernel_jax import SimTables, build_tables, simulate_batch, simulate_jax
-from .simkernel_ref import SimResult, TaskRecord, simulate
+from .simkernel_jax import SimTables, build_tables
+from .simkernel_jax import simulate_batch as _simulate_batch_impl
+from .simkernel_jax import simulate_jax as _simulate_jax_impl
+from .simkernel_ref import SimResult, TaskRecord
+from .simkernel_ref import simulate as _simulate_impl
 from . import reports, thermal
+
+
+simulate = _deprecated_entry_point(
+    _simulate_impl,
+    "repro.scenario.run(Scenario(...), backend='ref')")
+simulate_jax = _deprecated_entry_point(
+    _simulate_jax_impl,
+    "repro.scenario.run(Scenario(...), backend='jax')", energy_alias=True)
+simulate_batch = _deprecated_entry_point(
+    _simulate_batch_impl,
+    "repro.scenario.sweep(Scenario(...), axes={'trace': ...})",
+    energy_alias=True)
+
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,21 @@
+"""Shared shim factory for the one-release deprecation policy (DESIGN.md §4,
+§9): legacy entry points warn and delegate to the unchanged internals."""
+from __future__ import annotations
+
+import functools
+import warnings
+
+
+def deprecated_entry_point(fn, alternative: str, energy_alias: bool = False):
+    """Warn-and-delegate wrapper; ``energy_alias`` re-injects the one-release
+    ``energy_mj`` output key (the value always was joules)."""
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        warnings.warn(
+            f"calling {fn.__name__} directly is deprecated; use {alternative}",
+            DeprecationWarning, stacklevel=2)
+        out = fn(*args, **kwargs)
+        if energy_alias:
+            out["energy_mj"] = out["energy_j"]
+        return out
+    return wrapper

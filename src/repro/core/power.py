@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import warnings
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -41,11 +42,26 @@ def idle_power(pe: PE) -> float:
 
 @dataclasses.dataclass
 class EnergyReport:
-    total_energy_mj: float
-    energy_per_pe_mj: np.ndarray          # (num_pes,)
+    total_energy_j: float
+    energy_per_pe_j: np.ndarray           # (num_pes,)
     busy_us_per_pe: np.ndarray            # (num_pes,)
     avg_power_w: float
     makespan_us: float
+
+    # one-release deprecated aliases: the *_mj fields always stored joules
+    @property
+    def total_energy_mj(self) -> float:
+        warnings.warn("EnergyReport.total_energy_mj is deprecated (the field "
+                      "always stored joules); use total_energy_j",
+                      DeprecationWarning, stacklevel=2)
+        return self.total_energy_j
+
+    @property
+    def energy_per_pe_mj(self) -> np.ndarray:
+        warnings.warn("EnergyReport.energy_per_pe_mj is deprecated (the field "
+                      "always stored joules); use energy_per_pe_j",
+                      DeprecationWarning, stacklevel=2)
+        return self.energy_per_pe_j
 
 
 def energy_from_schedule(db: ResourceDB,
@@ -67,6 +83,6 @@ def energy_from_schedule(db: ResourceDB,
     for j, pe in enumerate(db.pes):
         idle = max(0.0, makespan_us - busy[j])
         e[j] += idle_power(pe) * idle
-    total_mj = float(e.sum()) * 1e-3 * 1e-3              # uJ -> mJ
+    total_j = float(e.sum()) * 1e-6                      # uJ -> J
     avg_p = float(e.sum()) * 1e-6 / max(makespan_us * 1e-6, 1e-12)
-    return EnergyReport(total_mj, e * 1e-6, busy, avg_p, makespan_us)
+    return EnergyReport(total_j, e * 1e-6, busy, avg_p, makespan_us)

@@ -50,7 +50,7 @@ def gantt_ascii(db: ResourceDB, result: SimResult, width: int = 100,
 
 
 def summary_csv(rows: Sequence[dict]) -> str:
-    """Rows of {scheduler, rate, avg_latency_us, throughput, energy_mj} -> CSV."""
+    """Rows of {scheduler, rate, avg_latency_us, throughput, energy_j} -> CSV."""
     if not rows:
         return ""
     keys = list(rows[0].keys())
@@ -70,6 +70,6 @@ def summarize(db: ResourceDB, result: SimResult, scheduler: str, rate: float) ->
         avg_job_latency_us=result.avg_job_latency_us,
         throughput_jobs_per_ms=result.throughput_jobs_per_ms,
         makespan_us=result.makespan_us,
-        energy_mj=result.energy.total_energy_mj,
+        energy_j=result.energy.total_energy_j,
         avg_power_w=result.energy.avg_power_w,
     )

@@ -242,13 +242,13 @@ def _simulate(tables: SimTables, policy: str, num_jobs: int,
         * jax.nn.one_hot(st["onpe"], tables.num_pes, dtype=jnp.float32)
         * jnp.where(valid_j, 1.0, 0.0)[..., None], axis=(0, 1))
     e_idle = jnp.sum(tables.power_idle * jnp.maximum(makespan - busy_per_pe, 0.0))
-    energy_mj = (e_active + e_idle) * 1e-6
+    energy_j = (e_active + e_idle) * 1e-6                # W·us -> J
 
     return dict(
         finish=st["finish"], start=st["start"], onpe=st["onpe"],
         scheduled=st["scheduled"], job_finish=job_finish,
         makespan_us=makespan, avg_job_latency_us=avg_latency,
-        energy_mj=energy_mj, busy_per_pe_us=busy_per_pe,
+        energy_j=energy_j, busy_per_pe_us=busy_per_pe,
     )
 
 

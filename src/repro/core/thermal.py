@@ -44,16 +44,16 @@ def cluster_nodes(db) -> np.ndarray:
     return out
 
 
-def node_power_split(db, energy_per_pe_mj: np.ndarray,
+def node_power_split(db, energy_per_pe_j: np.ndarray,
                      makespan_us: float) -> np.ndarray:
     """Average per-thermal-node power (W) realised by a schedule.
 
     Replaces any fixed big/LITTLE/accel split assumption: the split is derived
     from the energy each PE actually consumed over the makespan.
     """
-    # NB: EnergyReport.energy_per_pe_mj stores W·us · 1e-6 (i.e. joules) —
-    # same convention its avg_power_w is derived with, so no mJ factor here.
-    per_pe_w = (np.asarray(energy_per_pe_mj, dtype=np.float64)
+    # EnergyReport.energy_per_pe_j stores W·us · 1e-6 = joules — the same
+    # convention its avg_power_w is derived with.
+    per_pe_w = (np.asarray(energy_per_pe_j, dtype=np.float64)
                 / max(float(makespan_us) * 1e-6, 1e-12))
     return np.bincount(cluster_nodes(db), weights=per_pe_w,
                        minlength=NUM_NODES)[:NUM_NODES]

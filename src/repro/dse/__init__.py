@@ -11,9 +11,16 @@ exploration and dynamic resource management"; this package is that mode:
     pareto:      non-dominated sorting + crowding distance
     search:      evaluate / successive_halving / pareto_search refinement
     reports:     ASCII/CSV front reports + `python -m repro.dse.reports`
+
+Design sweeps are one axis of the unified ``repro.scenario`` facade:
+``sweep(scenario, axes={"design": points, …})`` supersedes calling
+``build_design_batch`` + ``simulate_design_batch`` by hand (the latter is
+kept as a deprecation shim).
 """
-from .batch import (DesignBatch, build_design_batch, simulate_design_batch,
+from ..core._deprecation import deprecated_entry_point as _deprecated_entry_point
+from .batch import (DesignBatch, build_design_batch, pad_node_map,
                     stack_tables, stack_traces)
+from .batch import simulate_design_batch as _simulate_design_batch_impl
 from .pareto import (crowding_distance, non_dominated_sort, pareto_mask,
                      pareto_order)
 from .reports import format_front, front_csv
@@ -23,5 +30,12 @@ from .space import AREA_MM2, AXES, DesignPoint, DesignSpace
 from .thermal_jax import (binned_power_trace, peak_temperature,
                           peak_temperature_grid, steady_state,
                           transient_trace)
+
+
+simulate_design_batch = _deprecated_entry_point(
+    _simulate_design_batch_impl,
+    "repro.scenario.sweep(Scenario(...), axes={'design': ..., ...})",
+    energy_alias=True)
+
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -49,6 +49,15 @@ def stack_tables(tables: Sequence[SimTables]) -> SimTables:
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *tables)
 
 
+def pad_node_map(dbs, pad_pes: int) -> jnp.ndarray:
+    """(D, P) thermal node per PE slot; padded slots are inert (zero-power)
+    and binned to the accel node by convention."""
+    nodes = np.full((len(dbs), pad_pes), NODE_ACCEL, dtype=np.int32)
+    for i, db in enumerate(dbs):
+        nodes[i, :db.num_pes] = cluster_nodes(db)
+    return jnp.asarray(nodes)
+
+
 def build_design_batch(points: Sequence[DesignPoint],
                        apps: Sequence[Application],
                        pad_pes: Optional[int] = None) -> DesignBatch:
@@ -63,12 +72,8 @@ def build_design_batch(points: Sequence[DesignPoint],
         P = pad_pes
     per_design = [build_tables(db, apps, governor=p.governor(), pad_pes=P)
                   for p, db in zip(points, dbs)]
-    nodes = np.full((len(dbs), P), NODE_ACCEL, dtype=np.int32)  # pad: inert,
-    # zero-power slots, binned to the accel node by convention
-    for i, db in enumerate(dbs):
-        nodes[i, :db.num_pes] = cluster_nodes(db)
     return DesignBatch(points=tuple(points), tables=stack_tables(per_design),
-                       node_of_pe=jnp.asarray(nodes))
+                       node_of_pe=pad_node_map(dbs, P))
 
 
 def stack_traces(traces: Sequence[JobTrace]) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -15,13 +15,12 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from ..core.applications import REFERENCE_APPS, get_application
-from ..core.jobgen import poisson_trace
+from ..core.applications import REFERENCE_APPS
 from .pareto import pareto_order
 from .search import EvalResult, SearchResult, evaluate, pareto_search
 from .space import DesignSpace
 
-_COLS = ("design", "area_mm2", "avg_latency_us", "energy_mj", "peak_temp_c")
+_COLS = ("design", "area_mm2", "avg_latency_us", "energy_j", "peak_temp_c")
 
 
 def _front_rows(result: EvalResult) -> List[dict]:
@@ -34,7 +33,7 @@ def _front_rows(result: EvalResult) -> List[dict]:
         p = result.points[idx[i]]
         rows.append(dict(design=p.label(), area_mm2=p.area_mm2,
                          avg_latency_us=obj[idx[i], 0],
-                         energy_mj=obj[idx[i], 1],
+                         energy_j=obj[idx[i], 1],
                          peak_temp_c=obj[idx[i], 2]))
     return rows
 
@@ -45,10 +44,10 @@ def format_front(result: EvalResult) -> str:
     out = io.StringIO()
     out.write(f"Pareto front: {len(rows)} of {result.num_designs} designs\n")
     out.write(f"{'design':>26} {'area':>7} {'latency_us':>11} "
-              f"{'energy_mj':>10} {'peak_C':>7}\n")
+              f"{'energy_j':>10} {'peak_C':>7}\n")
     for r in rows:
         out.write(f"{r['design']:>26} {r['area_mm2']:>7.1f} "
-                  f"{r['avg_latency_us']:>11.2f} {r['energy_mj']:>10.4f} "
+                  f"{r['avg_latency_us']:>11.2f} {r['energy_j']:>10.4f} "
                   f"{r['peak_temp_c']:>7.2f}\n")
     return out.getvalue()
 
@@ -82,8 +81,13 @@ def main(argv: Optional[Sequence[str]] = None) -> EvalResult:
     ap.add_argument("--csv", action="store_true", help="also print CSV")
     args = ap.parse_args(argv)
 
-    apps = [get_application(n) for n in args.apps]
-    traces = [poisson_trace(args.rate, args.jobs, args.apps, seed=args.seed + s)
+    # scenario construction lives in the facade: one declarative config
+    from ..scenario import Scenario, TraceSpec
+    base = Scenario(apps=tuple(args.apps), scheduler=args.policy,
+                    trace=TraceSpec(rate_jobs_per_ms=args.rate,
+                                    num_jobs=args.jobs, seed=args.seed))
+    apps = base.applications()
+    traces = [base.with_seed(args.seed + s).job_trace()
               for s in range(args.traces)]
     space = DesignSpace()
 

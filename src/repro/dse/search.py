@@ -1,9 +1,10 @@
 """Batched design-space evaluation + Pareto refinement loop.
 
 ``evaluate`` turns a list of design points into (latency, energy, peak-temp)
-objectives with ONE jitted tensor program per scheduler policy: designs are
-stacked (``repro.dse.batch``), traces are stacked, the schedule kernel vmaps
-over both axes and the RC thermal scan rides in the same jit.
+objectives with ONE jitted tensor program per scheduler policy.  It is a
+thin delegate over the ``repro.scenario`` facade: the design list becomes a
+``sweep(scenario, axes={"design": …, "trace": …})`` whose fused
+schedule-plus-thermal grid program lives in ``repro.scenario.sweep``.
 
 ``pareto_search`` is the refinement loop (DS3-journal style DSE): seed a
 latin-hypercube batch, keep a cross-round archive, and re-seed each next
@@ -14,23 +15,18 @@ batch on a trace subset before paying for the full evaluation.
 from __future__ import annotations
 
 import dataclasses
-import functools
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..core.applications import Application
 from ..core.jobgen import JobTrace
-from ..core.simkernel_jax import SimTables
-from .batch import (DesignBatch, _simulate_grid, build_design_batch,
-                    stack_traces)
+from .batch import DesignBatch, build_design_batch
 from .pareto import pareto_mask, pareto_order
 from .space import DesignPoint, DesignSpace
-from .thermal_jax import peak_temperature_grid
 
-OBJECTIVES = ("avg_latency_us", "energy_mj", "peak_temp_c")
+OBJECTIVES = ("avg_latency_us", "energy_j", "peak_temp_c")
 
 
 @dataclasses.dataclass
@@ -38,7 +34,7 @@ class EvalResult:
     """Objectives for D designs, averaged/maxed over S traces."""
     points: Tuple[DesignPoint, ...]
     avg_latency_us: np.ndarray        # (D,) mean over traces
-    energy_mj: np.ndarray             # (D,) mean over traces
+    energy_j: np.ndarray              # (D,) mean over traces
     peak_temp_c: np.ndarray           # (D,) max over traces
     latency_per_trace: np.ndarray     # (D, S)
     energy_per_trace: np.ndarray      # (D, S)
@@ -48,9 +44,17 @@ class EvalResult:
     def num_designs(self) -> int:
         return len(self.points)
 
+    @property
+    def energy_mj(self) -> np.ndarray:
+        """Deprecated alias: the field always stored joules."""
+        warnings.warn("EvalResult.energy_mj is deprecated (the field always "
+                      "stored joules); use energy_j",
+                      DeprecationWarning, stacklevel=2)
+        return self.energy_j
+
     def objectives(self) -> np.ndarray:
         """(D, 3) cost matrix (all minimised) in OBJECTIVES order."""
-        return np.stack([self.avg_latency_us, self.energy_mj,
+        return np.stack([self.avg_latency_us, self.energy_j,
                          self.peak_temp_c], axis=1)
 
     def front_mask(self) -> np.ndarray:
@@ -61,26 +65,13 @@ def _concat(a: "EvalResult", b: "EvalResult") -> "EvalResult":
     return EvalResult(
         points=a.points + b.points,
         avg_latency_us=np.concatenate([a.avg_latency_us, b.avg_latency_us]),
-        energy_mj=np.concatenate([a.energy_mj, b.energy_mj]),
+        energy_j=np.concatenate([a.energy_j, b.energy_j]),
         peak_temp_c=np.concatenate([a.peak_temp_c, b.peak_temp_c]),
         latency_per_trace=np.concatenate([a.latency_per_trace,
                                           b.latency_per_trace]),
         energy_per_trace=np.concatenate([a.energy_per_trace,
                                          b.energy_per_trace]),
         temp_per_trace=np.concatenate([a.temp_per_trace, b.temp_per_trace]))
-
-
-@functools.partial(jax.jit, static_argnames=("policy", "num_jobs", "bins",
-                                             "repeats"))
-def _evaluate_grid(tables: SimTables, node_of_pe: jnp.ndarray,
-                   arrival: jnp.ndarray, app_idx: jnp.ndarray,
-                   policy: str, num_jobs: int, bins: int, repeats: int):
-    """Schedule simulation + thermal scan fused into ONE compiled program."""
-    out = _simulate_grid(tables, policy, num_jobs, arrival, app_idx)
-    temps = peak_temperature_grid(out, node_of_pe, tables.power_active,
-                                  tables.power_idle, bins=bins,
-                                  repeats=repeats)
-    return out, temps
 
 
 def evaluate(points: Sequence[DesignPoint], apps: Sequence[Application],
@@ -93,22 +84,25 @@ def evaluate(points: Sequence[DesignPoint], apps: Sequence[Application],
     ``pad_pes`` fixes the padded PE width so successive calls with different
     design mixes reuse the same compiled program (jit cache hit).
     """
+    # lazy import: repro.scenario builds on repro.dse, not the reverse
+    from ..scenario import Scenario, ThermalSpec
+    from ..scenario.sweep import sweep
+
     if batch is None:
         batch = build_design_batch(points, apps, pad_pes=pad_pes)
     elif tuple(points) != batch.points:
         raise ValueError("points does not match batch.points — pass the same "
                          "design list the batch was built from")
-    arrival, app_idx = stack_traces(traces)
-    out, temps = _evaluate_grid(batch.tables, batch.node_of_pe,
-                                arrival, app_idx, policy=policy,
-                                num_jobs=int(arrival.shape[1]),
-                                bins=thermal_bins, repeats=thermal_repeats)
-    lat = np.asarray(out["avg_job_latency_us"], np.float64)       # (D, S)
-    energy = np.asarray(out["energy_mj"], np.float64)             # (D, S)
-    temps = np.asarray(temps, np.float64)                         # (D, S)
+    base = Scenario(apps=tuple(apps), scheduler=policy, governor="design",
+                    thermal=ThermalSpec(bins=thermal_bins,
+                                        repeats=thermal_repeats))
+    sr = sweep(base, axes={"design": list(batch.points),
+                           "trace": list(traces)},
+               backend="jax", design_batch=batch)
+    lat, energy, temps = sr.avg_latency_us, sr.energy_j, sr.peak_temp_c
     return EvalResult(points=tuple(batch.points),
                       avg_latency_us=lat.mean(axis=1),
-                      energy_mj=energy.mean(axis=1),
+                      energy_j=energy.mean(axis=1),
                       peak_temp_c=temps.max(axis=1),
                       latency_per_trace=lat, energy_per_trace=energy,
                       temp_per_trace=temps)

@@ -1,0 +1,21 @@
+"""repro.scenario — the unified, declarative entry point.
+
+One frozen :class:`Scenario` names the SoC design, application mix, workload
+trace, scheduler policy, DVFS governor, thermal settings and failure
+injection; two verbs consume it:
+
+    run(scenario, backend="ref"|"jax")   one simulation, one Result surface
+    sweep(scenario, axes={...})          cross-product batches in one
+                                         vmapped/jitted tensor program
+
+Both are bit-for-bit delegates to the legacy kernels (`repro.core.simulate`,
+`build_tables` + `simulate_jax`, `repro.dse` batching) — see DESIGN.md §9
+for the pytree layout, padding rules and equivalence contract.
+"""
+from .config import Scenario, ThermalSpec, TraceSpec
+from .result import Result, SweepResult
+from .run import run, tables_for
+from .sweep import sweep
+
+__all__ = ["Scenario", "ThermalSpec", "TraceSpec", "Result", "SweepResult",
+           "run", "sweep", "tables_for"]

@@ -1,0 +1,180 @@
+"""Declarative scenario configuration — one frozen dataclass wires a run.
+
+A :class:`Scenario` names everything a simulation needs — the SoC design
+point, the application mix, the workload trace, the scheduler policy, the
+DVFS governor, the thermal-evaluation settings and optional fail-stop
+events — without materialising any of it.  Materialisation (``soc()``,
+``applications()``, ``job_trace()``, ``make_scheduler()``…) happens in
+exactly one place, so every driver (benchmarks, examples, DSE, tests)
+constructs work the same way.
+
+``Scenario`` and its sub-specs are frozen, hashable, and registered as JAX
+pytrees whose fields are all static metadata: a scenario can ride through
+``jit``/``vmap`` closures and serve as a cache key (see
+``repro.scenario.run._cached_tables``).  See DESIGN.md §9.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+
+from ..core.applications import Application, get_application
+from ..core.dvfs import Governor, OndemandGovernor, get_governor
+from ..core.jobgen import JobTrace, deterministic_trace, poisson_trace
+from ..core.resources import ResourceDB
+from ..core.schedulers import (Scheduler, TableScheduler, get_scheduler,
+                               solve_optimal_table)
+from ..dse.space import DesignPoint
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """Declarative workload: which jobs arrive when (materialised lazily).
+
+    ``kind="poisson"`` draws exponential inter-arrival gaps at
+    ``rate_jobs_per_ms`` (paper Fig. 3 x-axis); ``kind="deterministic"``
+    spaces jobs ``gap_us`` apart.  ``mix`` optionally weights the choice
+    among the scenario's applications.
+    """
+    kind: str = "poisson"                      # "poisson" | "deterministic"
+    rate_jobs_per_ms: float = 20.0
+    gap_us: float = 50.0                       # deterministic arrivals only
+    num_jobs: int = 100
+    mix: Optional[Tuple[float, ...]] = None
+    seed: int = 0
+
+    def materialize(self, app_names: Tuple[str, ...]) -> JobTrace:
+        if self.kind == "poisson":
+            return poisson_trace(self.rate_jobs_per_ms, self.num_jobs,
+                                 app_names, seed=self.seed, mix=self.mix)
+        if self.kind == "deterministic":
+            return deterministic_trace(self.gap_us, self.num_jobs, app_names,
+                                       seed=self.seed)
+        raise ValueError(f"unknown trace kind {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ThermalSpec:
+    """RC thermal co-simulation settings (see DESIGN.md §6)."""
+    bins: int = 32              # power-trace time bins per schedule
+    repeats: int = 3            # periods scanned past the steady-state start
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One declarative simulation configuration.
+
+    Fields:
+      design      — SoC design point (defaults to the paper's Table-2 SoC);
+      apps        — application names (or ``Application`` objects) in the mix;
+      trace       — workload spec (see :class:`TraceSpec`);
+      scheduler   — ``"met" | "etf" | "table"`` (table = offline ILP solve);
+      governor    — DVFS governor name (``repro.core.dvfs.GOVERNORS``) or
+                    ``"design"`` for a userspace governor pinned to the
+                    design point's per-cluster frequency caps;
+      governor_params — extra governor kwargs as a hashable (key, value)
+                    tuple, e.g. ``(("up_threshold", 0.9),)``;
+      thermal     — peak-temperature evaluation settings;
+      failures    — fail-stop events ((pe_id, fail_time_us), …), reference
+                    backend only.
+    """
+    design: DesignPoint = DesignPoint()
+    apps: Tuple[Union[str, Application], ...] = ("wifi_tx",)
+    trace: TraceSpec = TraceSpec()
+    scheduler: str = "etf"
+    governor: str = "performance"
+    governor_params: Tuple[Tuple[str, float], ...] = ()
+    thermal: ThermalSpec = ThermalSpec()
+    failures: Tuple[Tuple[int, float], ...] = ()
+
+    # -- materialisation (the single construction point) -------------------
+    def soc(self) -> ResourceDB:
+        """A fresh ``ResourceDB`` for the design point."""
+        return self.design.to_db()
+
+    def applications(self) -> Tuple[Application, ...]:
+        return tuple(a if isinstance(a, Application) else get_application(a)
+                     for a in self.apps)
+
+    def app_names(self) -> Tuple[str, ...]:
+        return tuple(a.name for a in self.applications())
+
+    def job_trace(self) -> JobTrace:
+        return self.trace.materialize(self.app_names())
+
+    def make_governor(self) -> Governor:
+        if self.governor == "design":
+            return self.design.governor()      # frequency-cap userspace
+        return get_governor(self.governor, **dict(self.governor_params))
+
+    def schedule_table(self) -> Optional[Dict[Tuple[str, int], int]]:
+        """The offline ILP table for ``scheduler="table"`` (cached), else None."""
+        if self.scheduler != "table":
+            return None
+        return _solve_table_cached(self.design, self.apps)
+
+    def make_scheduler(self) -> Scheduler:
+        if self.scheduler == "table":
+            return TableScheduler(self.schedule_table())
+        return get_scheduler(self.scheduler)
+
+    # -- convenience -------------------------------------------------------
+    def replace(self, **kwargs) -> "Scenario":
+        """``dataclasses.replace`` that also resolves dotted axis paths,
+        e.g. ``replace(**{"trace.seed": 3, "design.num_big": 2})``."""
+        out = self
+        for key, value in kwargs.items():
+            if "." in key:
+                head, _, field = key.partition(".")
+                sub = dataclasses.replace(getattr(out, head), **{field: value})
+                out = dataclasses.replace(out, **{head: sub})
+            else:
+                out = dataclasses.replace(out, **{key: value})
+        return out
+
+    def at_rate(self, rate_jobs_per_ms: float) -> "Scenario":
+        return self.replace(**{"trace.rate_jobs_per_ms": rate_jobs_per_ms})
+
+    def with_seed(self, seed: int) -> "Scenario":
+        return self.replace(**{"trace.seed": seed})
+
+    def label(self) -> str:
+        return (f"{self.design.label()}|{'+'.join(self.app_names())}"
+                f"|{self.scheduler}|{self.governor}")
+
+
+@functools.lru_cache(maxsize=64)
+def _solve_table_cached(design: DesignPoint,
+                        apps: Tuple[Union[str, Application], ...]):
+    db = design.to_db()
+    table: Dict[Tuple[str, int], int] = {}
+    for app in (a if isinstance(a, Application) else get_application(a)
+                for a in apps):
+        table.update(solve_optimal_table(db, app))
+    return table
+
+
+def static_governor_or_raise(scn: Scenario) -> Governor:
+    """The scenario's governor, rejecting window-sampled ones for JAX.
+
+    The JAX kernel supports static OPPs only (DESIGN.md §7); ondemand needs
+    data-dependent re-profiling and lives in the reference kernel.
+    """
+    gov = scn.make_governor()
+    if isinstance(gov, OndemandGovernor):
+        raise ValueError(
+            "the JAX backend supports static governors only "
+            "(performance/powersave/userspace/design); run ondemand "
+            "scenarios with backend='ref' (DESIGN.md §7)")
+    return gov
+
+
+# All fields are static metadata: flattening yields no array leaves, so a
+# Scenario can close over jitted code or key a cache without retracing.
+for _cls in (TraceSpec, ThermalSpec, Scenario):
+    jax.tree_util.register_dataclass(
+        _cls, data_fields=[],
+        meta_fields=[f.name for f in dataclasses.fields(_cls)])

@@ -1,0 +1,111 @@
+"""``run(scenario, backend=...)`` — one scenario, either kernel.
+
+The facade is a thin, bit-for-bit delegate: ``backend="ref"`` materialises
+the scenario and calls the event-heap oracle exactly as
+``repro.core.simulate`` always has; ``backend="jax"`` builds the same
+``SimTables`` the legacy ``build_tables`` + ``simulate_jax`` pair would and
+runs the unchanged kernel (the equivalence contract is tested in
+``tests/test_scenario.py``).  Tables are cached on the (frozen, hashable)
+scenario minus its trace, so repeated runs over different workloads reuse
+the compiled program and device constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import numpy as np
+
+from ..core import simkernel_jax as _jaxk
+from ..core import simkernel_ref as _refk
+from ..core.simkernel_jax import SimTables
+from ..core.thermal import cluster_nodes
+from ..dse import thermal_jax as _thermal_jax
+from .config import Scenario, ThermalSpec, TraceSpec, static_governor_or_raise
+from .result import Result
+
+BACKENDS = ("ref", "jax")
+
+
+def _tables_key(scn: Scenario) -> Scenario:
+    """Strip table-irrelevant fields so different workloads share tables.
+
+    The scheduler only shapes tables through the offline ILP table, so all
+    non-"table" policies collapse to one cache entry per design/governor.
+    """
+    scheduler = scn.scheduler if scn.scheduler == "table" else "etf"
+    return dataclasses.replace(scn, trace=TraceSpec(), failures=(),
+                               thermal=ThermalSpec(), scheduler=scheduler)
+
+
+@functools.lru_cache(maxsize=256)
+def _cached_tables(key: Scenario, pad_pes: Optional[int]) -> SimTables:
+    db = key.soc()
+    return _jaxk.build_tables(db, key.applications(),
+                              governor=static_governor_or_raise(key),
+                              table=key.schedule_table(), pad_pes=pad_pes)
+
+
+def tables_for(scn: Scenario, pad_pes: Optional[int] = None) -> SimTables:
+    """The scenario's ``SimTables`` (identical to the legacy ``build_tables``
+    call), cached across traces/thermal settings."""
+    return _cached_tables(_tables_key(scn), pad_pes)
+
+
+@functools.lru_cache(maxsize=256)
+def _cached_nodes(design) -> np.ndarray:
+    """Thermal node per PE for a design (depends on the design alone)."""
+    return np.asarray(cluster_nodes(design.to_db()), np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bins", "repeats"))
+def _peak_temp_single(start, finish, onpe, scheduled, nodes, p_act, p_idle,
+                      makespan, bins, repeats):
+    """One schedule's RC peak temperature (jitted; compiles per shape)."""
+    power_trace, dt_s = _thermal_jax.binned_power_trace(
+        start, finish, onpe, scheduled, nodes, p_act, p_idle, makespan,
+        bins=bins)
+    return _thermal_jax.peak_temperature(power_trace, dt_s, repeats=repeats)
+
+
+def run(scenario: Scenario, backend: str = "ref", *,
+        trace_override=None) -> Result:
+    """Simulate one scenario.
+
+    ``backend="ref"``: the event-heap reference kernel — all governors and
+    fail-stop injection supported.  ``backend="jax"``: the vectorised kernel
+    — static governors, no failures, plus the RC peak-temperature
+    co-simulation.  Both return the same :class:`Result` surface.
+
+    ``trace_override``: a pre-materialised ``JobTrace`` replacing the
+    scenario's trace spec (plumbing for ``sweep`` axes that carry explicit
+    traces).
+    """
+    if backend == "ref":
+        db = scenario.soc()
+        res = _refk.simulate(db, scenario.applications(),
+                             trace_override or scenario.job_trace(),
+                             scenario.make_scheduler(),
+                             scenario.make_governor(),
+                             failures=list(scenario.failures) or None)
+        return Result.from_ref(scenario, db, res)
+
+    if backend == "jax":
+        if scenario.failures:
+            raise ValueError("fail-stop injection is reference-kernel only; "
+                             "use backend='ref'")
+        tables = tables_for(scenario)
+        trace = trace_override or scenario.job_trace()
+        out = _jaxk.simulate_jax(tables, scenario.scheduler,
+                                 trace.arrival_us, trace.app_index)
+        peak = _peak_temp_single(
+            out["start"], out["finish"], out["onpe"], out["scheduled"],
+            _cached_nodes(scenario.design),
+            tables.power_active, tables.power_idle, out["makespan_us"],
+            bins=scenario.thermal.bins, repeats=scenario.thermal.repeats)
+        return Result.from_jax(scenario, out, scenario.design.num_pes,
+                               float(peak))
+
+    raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")

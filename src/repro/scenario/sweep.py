@@ -1,0 +1,286 @@
+"""``sweep(scenario, axes={...})`` — cross-product scenario batches.
+
+Any combination of scenario axes — arrival rate × scheduler × design point ×
+frequency cap × seed — is expanded into one batch.  Axes factorise into
+three kinds (see DESIGN.md §9):
+
+* **design-affecting** (``design``, ``design.<field>``, ``governor``,
+  ``governor_params``): each combination becomes a padded ``SimTables`` lane,
+  reusing ``repro.dse.batch``'s inert-padding scheme (pad every design to the
+  widest PE count, stack leaf-wise);
+* **trace-affecting** (``trace``, ``trace.<field>``, aliases ``rate`` /
+  ``seed`` / ``jobs``): each combination becomes a stacked workload row;
+* **static** (``scheduler``): a compile-time branch of the kernel — swept in
+  an outer python loop, one compiled program per value.
+
+For one scheduler the whole (designs × traces) cross-product runs as ONE
+vmapped/jitted tensor program — schedule kernel and RC thermal scan fused —
+and every lane is bit-for-bit equal to a per-point ``run(..., backend="jax")``
+(padding is inert; a vmap lane equals a single call).  ``backend="ref"``
+sweeps the same cross-product through the event-heap oracle lane by lane.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from ..core.jobgen import JobTrace
+from ..dse.batch import (_simulate_grid, pad_node_map, stack_tables,
+                         stack_traces)
+from ..dse.space import DesignPoint
+from ..dse.thermal_jax import peak_temperature_grid
+from .config import Scenario, TraceSpec
+from .result import SweepResult
+from .run import run, tables_for
+
+AXIS_ALIASES = {
+    "rate": "trace.rate_jobs_per_ms",
+    "seed": "trace.seed",
+    "jobs": "trace.num_jobs",
+}
+
+_DESIGN_FIELDS = {f.name for f in dataclasses.fields(DesignPoint)}
+_TRACE_FIELDS = {f.name for f in dataclasses.fields(TraceSpec)}
+
+# number of times the fused grid program has been traced (re-compiled);
+# the single-compile sweep contract is asserted against this counter
+compile_count = [0]
+
+
+def _canon(name: str) -> str:
+    return AXIS_ALIASES.get(name, name)
+
+
+def _axis_kind(name: str) -> str:
+    name = _canon(name)
+    if name == "scheduler":
+        return "static"
+    if name in ("design", "governor", "governor_params"):
+        return "design"
+    if name.startswith("design."):
+        field = name.split(".", 1)[1]
+        if field not in _DESIGN_FIELDS:
+            raise ValueError(f"unknown design axis field {field!r}")
+        return "design"
+    if name == "trace":
+        return "trace"
+    if name.startswith("trace."):
+        field = name.split(".", 1)[1]
+        if field not in _TRACE_FIELDS:
+            raise ValueError(f"unknown trace axis field {field!r}")
+        return "trace"
+    raise ValueError(
+        f"unknown sweep axis {name!r}; use 'design', 'design.<field>', "
+        f"'governor', 'scheduler', 'trace', 'trace.<field>' or aliases "
+        f"{sorted(AXIS_ALIASES)}")
+
+
+def _apply_axes(scn: Scenario, names: Sequence[str],
+                values: Sequence) -> Scenario:
+    """Apply axis values to a scenario ('trace'-axis JobTraces excluded)."""
+    for name, value in zip(names, values):
+        name = _canon(name)
+        if name == "trace" and isinstance(value, JobTrace):
+            continue                       # materialised out-of-band
+        scn = scn.replace(**{name: value})
+    return scn
+
+
+def _lane_trace(scn: Scenario, names: Sequence[str],
+                values: Sequence) -> JobTrace:
+    for name, value in zip(names, values):
+        if _canon(name) == "trace" and isinstance(value, JobTrace):
+            return value
+    return scn.job_trace()
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "num_jobs", "bins",
+                                             "repeats"))
+def _sweep_grid(tables, node_of_pe, arrival, app_idx, policy, num_jobs,
+                bins, repeats):
+    """Schedule simulation + thermal scan for (D, S) lanes, ONE program."""
+    compile_count[0] += 1                  # python body runs only on trace
+    out = _simulate_grid(tables, policy, num_jobs, arrival, app_idx)
+    temps = peak_temperature_grid(out, node_of_pe, tables.power_active,
+                                  tables.power_idle, bins=bins,
+                                  repeats=repeats)
+    return out, temps
+
+
+def _design_lanes(base: Scenario, design_axes: List[str],
+                  combos: List[Tuple], pad_pes: Optional[int]):
+    """Padded+stacked tables and thermal-node map for the design lanes."""
+    scns = [_apply_axes(base, design_axes, c) for c in combos]
+    dbs = [s.soc() for s in scns]
+    P = max(db.num_pes for db in dbs)
+    if pad_pes is not None:
+        if pad_pes < P:
+            raise ValueError(f"pad_pes={pad_pes} < widest design {P}")
+        P = pad_pes
+    tables = stack_tables([tables_for(s, pad_pes=P) for s in scns])
+    return tables, pad_node_map(dbs, P)
+
+
+def sweep(scenario: Scenario, axes: Dict[str, Sequence],
+          backend: str = "jax", pad_pes: Optional[int] = None,
+          design_batch=None) -> SweepResult:
+    """Simulate the cross-product of ``axes`` around ``scenario``.
+
+    ``axes`` maps axis names to value sequences; result arrays are shaped
+    ``tuple(len(v) for v in axes.values())`` in dict order.  ``pad_pes``
+    fixes the padded PE width (jit-cache stability across design mixes);
+    ``design_batch`` (a prebuilt ``repro.dse.DesignBatch``) short-circuits
+    table construction when the caller already stacked the design axis —
+    it must correspond to a single ``"design"`` axis with matching points.
+    """
+    if not axes:
+        raise ValueError("axes must name at least one swept dimension")
+    names = list(axes)
+    values = {n: tuple(axes[n]) for n in names}
+    if any(len(v) == 0 for v in values.values()):
+        raise ValueError("every sweep axis needs at least one value")
+    canon = [_canon(n) for n in names]
+    if len(set(canon)) != len(canon):
+        dups = sorted({c for c in canon if canon.count(c) > 1})
+        raise ValueError(
+            f"duplicate sweep axes after alias resolution: {dups} "
+            f"(e.g. 'seed' and 'trace.seed' name the same field)")
+    kinds = {n: _axis_kind(n) for n in names}
+    static_axes = [n for n in names if kinds[n] == "static"]
+    design_axes = [n for n in names if kinds[n] == "design"]
+    trace_axes = [n for n in names if kinds[n] == "trace"]
+    # a whole-object axis would silently overwrite per-field axes of the
+    # same object (duplicated lanes, no error) — reject the combination
+    for whole in ("trace", "design"):
+        fields = [n for n in names if _canon(n).startswith(whole + ".")]
+        if whole in canon and fields:
+            raise ValueError(
+                f"axis '{whole}' conflicts with per-field axes {fields}: "
+                f"a whole-'{whole}' value replaces the fields those axes set")
+
+    if backend == "ref":
+        return _sweep_ref(scenario, names, values)
+    if backend != "jax":
+        raise ValueError(f"unknown backend {backend!r}")
+    if scenario.failures:
+        raise ValueError("fail-stop injection is reference-kernel only")
+
+    static_combos = list(itertools.product(
+        *(values[n] for n in static_axes))) or [()]
+    design_combos = list(itertools.product(
+        *(values[n] for n in design_axes))) or [()]
+    trace_combos = list(itertools.product(
+        *(values[n] for n in trace_axes))) or [()]
+
+    # workloads: one stacked (S, J) pair shared by every design lane
+    t_scns = [_apply_axes(scenario, trace_axes, c) for c in trace_combos]
+    traces = [_lane_trace(s, trace_axes, c)
+              for s, c in zip(t_scns, trace_combos)]
+    job_counts = {t.num_jobs for t in traces}
+    if len(job_counts) > 1:
+        raise ValueError(
+            f"the jax backend needs equal job counts per lane to stack one "
+            f"(S, J) workload tensor, got {sorted(job_counts)}; sweep the "
+            f"'jobs' axis with backend='ref' instead")
+    arrival, app_idx = stack_traces(traces)
+    num_jobs = int(arrival.shape[1])
+
+    if design_batch is not None:
+        if design_axes != ["design"] or tuple(
+                values["design"]) != design_batch.points:
+            raise ValueError("design_batch requires a single 'design' axis "
+                             "matching design_batch.points")
+        if scenario.governor != "design":
+            # build_design_batch bakes each point's frequency-cap governor
+            # into the tables; any other governor would silently diverge
+            # from the per-point run() equivalence contract
+            raise ValueError("design_batch tables pin the design frequency "
+                             "caps; the scenario must use governor='design'")
+        if int(design_batch.tables.exec_us.shape[1]) \
+                != len(scenario.applications()):
+            raise ValueError("design_batch was built for a different "
+                             "application list than the scenario's")
+        tables, node_of_pe = design_batch.tables, design_batch.node_of_pe
+
+    # tables depend on the static (scheduler) axis only through the offline
+    # ILP table — hoist the (D, …) stack out of the loop unless a swept
+    # combo actually selects the "table" policy
+    rebuild_per_combo = design_batch is None and any(
+        _apply_axes(scenario, static_axes, sc).scheduler == "table"
+        for sc in static_combos)
+    if design_batch is None and not rebuild_per_combo:
+        tables, node_of_pe = _design_lanes(scenario, design_axes,
+                                           design_combos, pad_pes)
+
+    per_static = []
+    for sc in static_combos:
+        s_scn = _apply_axes(scenario, static_axes, sc)
+        if rebuild_per_combo:
+            tables, node_of_pe = _design_lanes(s_scn, design_axes,
+                                               design_combos, pad_pes)
+        out, temps = _sweep_grid(tables, node_of_pe, arrival, app_idx,
+                                 policy=s_scn.scheduler, num_jobs=num_jobs,
+                                 bins=s_scn.thermal.bins,
+                                 repeats=s_scn.thermal.repeats)
+        per_static.append(dict(
+            avg_latency_us=np.asarray(out["avg_job_latency_us"], np.float64),
+            makespan_us=np.asarray(out["makespan_us"], np.float64),
+            energy_j=np.asarray(out["energy_j"], np.float64),
+            peak_temp_c=np.asarray(temps, np.float64),
+            busy_per_pe_us=np.asarray(out["busy_per_pe_us"], np.float64)))
+
+    # assemble: (static..., design..., trace..., extra) then user axis order
+    d_lens = [len(values[n]) for n in design_axes]
+    t_lens = [len(values[n]) for n in trace_axes]
+    s_lens = [len(values[n]) for n in static_axes]
+    internal = static_axes + design_axes + trace_axes
+    perm = [internal.index(n) for n in names]
+
+    def _assemble(key: str) -> np.ndarray:
+        stacked = np.stack([g[key] for g in per_static])     # (Σstatic, D, S, …)
+        extra = stacked.shape[3:]
+        arr = stacked.reshape(*s_lens, *d_lens, *t_lens, *extra)
+        k = len(internal)
+        return np.transpose(arr, axes=perm + list(range(k, arr.ndim)))
+
+    makespan = _assemble("makespan_us")
+    return SweepResult(
+        base=scenario, backend="jax", axes=values,
+        avg_latency_us=_assemble("avg_latency_us"),
+        throughput_jobs_per_ms=num_jobs / np.maximum(makespan, 1e-9) * 1e3,
+        makespan_us=makespan, energy_j=_assemble("energy_j"),
+        peak_temp_c=_assemble("peak_temp_c"),
+        busy_per_pe_us=_assemble("busy_per_pe_us"))
+
+
+def _sweep_ref(scenario: Scenario, names: List[str],
+               values: Dict[str, Tuple]) -> SweepResult:
+    """Cross-product sweep through the reference kernel, lane by lane."""
+    shape = tuple(len(values[n]) for n in names)
+    lanes = list(itertools.product(*(values[n] for n in names)))
+    results = []
+    for combo in lanes:
+        scn = _apply_axes(scenario, names, combo)
+        trace = _lane_trace(scn, names, combo)
+        results.append(run(scn, backend="ref", trace_override=trace))
+    P = max(r.utilization.shape[0] for r in results)
+    busy = np.zeros((len(lanes), P), np.float64)
+    for i, r in enumerate(results):
+        busy[i, :r.utilization.shape[0]] = r.utilization * r.makespan_us
+
+    def _arr(field):
+        return np.asarray([getattr(r, field) for r in results],
+                          np.float64).reshape(shape)
+
+    return SweepResult(
+        base=scenario, backend="ref", axes=values,
+        avg_latency_us=_arr("avg_latency_us"),
+        throughput_jobs_per_ms=_arr("throughput_jobs_per_ms"),
+        makespan_us=_arr("makespan_us"), energy_j=_arr("energy_j"),
+        peak_temp_c=_arr("peak_temp_c"),
+        busy_per_pe_us=busy.reshape(*shape, P))

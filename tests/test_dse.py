@@ -8,12 +8,15 @@ steady state / the numpy reference integrator.
 import numpy as np
 import pytest
 
-from repro.core import build_tables, poisson_trace, simulate_jax, thermal, \
+from repro.core import build_tables, poisson_trace, thermal, \
     wifi_tx, get_application
+# kernels imported directly: the re-exports are deprecation shims
+from repro.core.simkernel_jax import simulate_jax
+from repro.dse.batch import simulate_design_batch
 from repro.dse import (DesignPoint, DesignSpace, binned_power_trace,
                        build_design_batch, crowding_distance, evaluate,
                        non_dominated_sort, pareto_mask, pareto_search,
-                       peak_temperature_grid, simulate_design_batch,
+                       peak_temperature_grid,
                        stack_traces, successive_halving, transient_trace)
 from repro.dse import thermal_jax
 
@@ -123,8 +126,8 @@ def test_padded_batch_matches_per_design(policy):
                 np.asarray(out["makespan_us"])[d, s],
                 np.asarray(ref["makespan_us"]))
             np.testing.assert_array_equal(
-                np.asarray(out["energy_mj"])[d, s],
-                np.asarray(ref["energy_mj"]))
+                np.asarray(out["energy_j"])[d, s],
+                np.asarray(ref["energy_j"]))
             np.testing.assert_array_equal(
                 np.asarray(out["busy_per_pe_us"])[d, s, :p.num_pes],
                 np.asarray(ref["busy_per_pe_us"]))
@@ -179,7 +182,7 @@ def test_binned_power_conserves_energy():
         # node power (W) * bin width (us) * 1e-6 -> J, == kernel energy field
         e_binned = float(np.sum(np.asarray(trace_kw)) * np.asarray(dt_us)
                          * 1e6 * 1e-6)
-        e_kernel = float(np.asarray(out["energy_mj"])[0, s])
+        e_kernel = float(np.asarray(out["energy_j"])[0, s])
         assert e_binned == pytest.approx(e_kernel, rel=1e-3)
 
 

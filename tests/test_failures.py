@@ -8,7 +8,8 @@ import pytest
 from _hypothesis_stub import given, settings, st
 
 from repro.core import (get_scheduler, make_soc_table2, poisson_trace,
-                        simulate, wifi_tx)
+                        wifi_tx)
+from repro.core.simkernel_ref import simulate
 
 
 def _all_jobs_complete(res, trace, app):

@@ -3,8 +3,8 @@ import numpy as np
 import pytest
 
 from repro.core import (active_power, get_governor, get_scheduler, idle_power,
-                        make_soc_table2, poisson_trace, simulate, thermal,
-                        wifi_tx)
+                        make_soc_table2, poisson_trace, thermal, wifi_tx)
+from repro.core.simkernel_ref import simulate
 from repro.core.resources import CPU_BIG, CPU_LITTLE, OPP_TABLE
 
 
@@ -31,6 +31,41 @@ def test_governors_initial_frequencies():
     assert od.update(CPU_BIG, 2.0, utilization=0.05) < 2.0    # idle -> down
 
 
+def test_ondemand_threshold_transitions():
+    od = get_governor("ondemand", up_threshold=0.8, sample_window_us=50.0)
+    big_opps = [f for f, _ in OPP_TABLE[CPU_BIG]]
+    # above up_threshold: jump straight to fmax from any frequency
+    assert od.update(CPU_BIG, 0.6, utilization=0.81) == big_opps[-1]
+    assert od.update(CPU_BIG, 1.4, utilization=1.0) == big_opps[-1]
+    assert od.update(CPU_LITTLE, 0.6, utilization=0.9) \
+        == OPP_TABLE[CPU_LITTLE][-1][0]
+    # at/below the threshold: proportional step-down to the smallest OPP
+    # covering target = fmax * util / up_threshold
+    assert od.update(CPU_BIG, 2.0, utilization=0.0) == big_opps[0]   # fmin
+    assert od.update(CPU_BIG, 2.0, utilization=0.4) == 1.0   # 2.0*0.4/0.8
+    assert od.update(CPU_BIG, 2.0, utilization=0.5) == 1.4   # 1.25 -> 1.4
+    assert od.update(CPU_BIG, 1.0, utilization=0.8) == 2.0   # target fmax
+    # custom threshold changes the proportional mapping
+    od2 = get_governor("ondemand", up_threshold=0.5)
+    assert od2.update(CPU_BIG, 2.0, utilization=0.25) == 1.0
+
+
+def test_userspace_per_type_dict_vs_scalar():
+    scalar = get_governor("userspace", freq_ghz=1.0)
+    assert scalar.initial_freq(CPU_BIG) == 1.0
+    assert scalar.initial_freq(CPU_LITTLE) == 1.0
+    per_type = get_governor("userspace",
+                            freq_ghz={CPU_BIG: 1.8, CPU_LITTLE: 0.8})
+    assert per_type.initial_freq(CPU_BIG) == 1.8
+    assert per_type.initial_freq(CPU_LITTLE) == 0.8
+    with pytest.raises(KeyError):
+        get_governor("userspace", freq_ghz={CPU_BIG: 1.8}) \
+            .initial_freq(CPU_LITTLE)
+    # static governor: update() never moves the frequency
+    assert per_type.update(CPU_BIG, 1.8, utilization=0.99) == 1.8
+    assert scalar.update(CPU_LITTLE, 1.0, utilization=0.0) == 1.0
+
+
 def test_powersave_slower_but_sim_still_correct():
     db = make_soc_table2()
     app = wifi_tx()
@@ -42,7 +77,7 @@ def test_powersave_slower_but_sim_still_correct():
     assert save.avg_job_latency_us > perf.avg_job_latency_us
     # powersave spends less energy on the CPU portion; with fixed-latency
     # accelerators dominating idle leakage the total can still drop
-    assert save.energy.total_energy_mj < perf.energy.total_energy_mj * 1.5
+    assert save.energy.total_energy_j < perf.energy.total_energy_j * 1.5
 
 
 def test_ondemand_ramps_under_load():
