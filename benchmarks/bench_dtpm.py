@@ -1,25 +1,75 @@
-"""Paper §2 DTPM capability: energy/latency trade-off across DVFS governors
-(the power/thermal exploration the framework exists to enable)."""
-from repro.core import thermal
+"""Paper §2 DTPM capability: energy/latency/temperature trade-off across
+DVFS governors — now including the closed-loop dynamic policies the JAX
+kernel runs (ondemand + thermal throttle), so the DTPM kernel's numbers and
+warm wall-clock are benchmarked every PR.
+
+Peak temperature comes straight off the ``Result`` surface: the reference
+backend reports the schedule's steady-state read-out, the DTPM kernel the
+inline RC loop its throttle feedback integrates (DESIGN.md §7).
+
+``python -m benchmarks.bench_dtpm [--json PATH]`` runs this module alone and
+optionally dumps the rows as JSON (the CI perf artifact).
+"""
+from __future__ import annotations
+
+import time
+
 from repro.scenario import Scenario, TraceSpec, run as run_scenario
 
 SCN = Scenario(apps=("wifi_tx",),
                trace=TraceSpec(rate_jobs_per_ms=20.0, num_jobs=150, seed=0))
 
+# (row label, governor, governor_params, backend)
+CASES = [
+    ("performance", "performance", (), "ref"),
+    ("powersave", "powersave", (), "ref"),
+    ("ondemand", "ondemand", (), "ref"),
+    ("ondemand_jax", "ondemand", (), "jax"),
+    # same thermal dilation with and without the cap, so the t_peak pair is
+    # directly comparable and shows the cap binding (27 C < uncapped peak):
+    # the closed loop trades latency for temperature
+    ("ondemand_dt50ms_jax", "ondemand", (("thermal_dt_s", 0.05),), "jax"),
+    ("throttle_jax", "throttle", (("thermal_cap_c", 27.0),
+                                  ("thermal_dt_s", 0.05)), "jax"),
+]
+
 
 def run():
-    db = SCN.soc()
     rows = []
-    for gov in ["performance", "powersave", "ondemand"]:
-        res = run_scenario(SCN.replace(governor=gov), backend="ref")
-        rows.append((f"dtpm/{gov}/latency", res.avg_latency_us,
+    for label, gov, params, backend in CASES:
+        scn = SCN.replace(governor=gov, governor_params=params)
+        res = run_scenario(scn, backend=backend)
+        if backend == "jax":
+            # warm wall-clock of the compiled DTPM kernel (compile excluded)
+            t0 = time.perf_counter()
+            res = run_scenario(scn, backend=backend)
+            rows.append((f"dtpm/{label}/wall", (time.perf_counter() - t0)
+                         * 1e6, "us_warm"))
+        rows.append((f"dtpm/{label}/latency", res.avg_latency_us,
                      "avg_job_latency_us"))
-        rows.append((f"dtpm/{gov}/energy", res.energy_j, "total_j"))
-        rows.append((f"dtpm/{gov}/power", res.avg_power_w, "avg_W"))
-        # steady-state temperature at the power split the schedule realised
-        # (per-PE energy over the makespan, aggregated per thermal node)
-        p = thermal.node_power_split(db, res.energy_report.energy_per_pe_j,
-                                     res.makespan_us)
-        rows.append((f"dtpm/{gov}/t_steady", thermal.steady_state(p)[0],
-                     "big_cluster_C"))
+        rows.append((f"dtpm/{label}/energy", res.energy_j, "total_j"))
+        rows.append((f"dtpm/{label}/power", res.avg_power_w, "avg_W"))
+        rows.append((f"dtpm/{label}/t_peak", res.peak_temp_c, "peak_C"))
     return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH",
+                    help="also dump rows as JSON (CI perf artifact)")
+    args = ap.parse_args(argv)
+    rows = run()
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.4f},{derived}")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump([dict(name=n, value=v, derived=d)
+                       for n, v, d in rows], fh, indent=2)
+
+
+if __name__ == "__main__":
+    main()

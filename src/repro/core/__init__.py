@@ -17,8 +17,10 @@ from ._deprecation import deprecated_entry_point as _deprecated_entry_point
 from .applications import (Application, REFERENCE_APPS, Task, get_application,
                            pulse_doppler, range_detection, single_carrier,
                            wifi_rx, wifi_tx)
-from .dvfs import (GOVERNORS, Governor, OndemandGovernor, PerformanceGovernor,
-                   PowersaveGovernor, UserspaceGovernor, get_governor)
+from .dvfs import (GOVERNORS, Governor, GovernorPolicy, OndemandGovernor,
+                   PerformanceGovernor, PowersaveGovernor, ThrottleGovernor,
+                   UserspaceGovernor, get_governor, ondemand_index,
+                   stack_policies, throttle_index)
 from .jobgen import JobTrace, deterministic_trace, poisson_trace, rate_sweep
 from .power import EnergyReport, active_power, energy_from_schedule, idle_power
 from .resources import (ACC_FFT, ACC_SCRAMBLER, ACC_VITERBI, CPU_BIG,
@@ -40,11 +42,10 @@ simulate = _deprecated_entry_point(
     "repro.scenario.run(Scenario(...), backend='ref')")
 simulate_jax = _deprecated_entry_point(
     _simulate_jax_impl,
-    "repro.scenario.run(Scenario(...), backend='jax')", energy_alias=True)
+    "repro.scenario.run(Scenario(...), backend='jax')")
 simulate_batch = _deprecated_entry_point(
     _simulate_batch_impl,
-    "repro.scenario.sweep(Scenario(...), axes={'trace': ...})",
-    energy_alias=True)
+    "repro.scenario.sweep(Scenario(...), axes={'trace': ...})")
 
 
 __all__ = [n for n in dir() if not n.startswith("_")]

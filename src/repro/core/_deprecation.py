@@ -6,16 +6,12 @@ import functools
 import warnings
 
 
-def deprecated_entry_point(fn, alternative: str, energy_alias: bool = False):
-    """Warn-and-delegate wrapper; ``energy_alias`` re-injects the one-release
-    ``energy_mj`` output key (the value always was joules)."""
+def deprecated_entry_point(fn, alternative: str):
+    """Warn-and-delegate wrapper around an unchanged internal entry point."""
     @functools.wraps(fn)
     def wrapper(*args, **kwargs):
         warnings.warn(
             f"calling {fn.__name__} directly is deprecated; use {alternative}",
             DeprecationWarning, stacklevel=2)
-        out = fn(*args, **kwargs)
-        if energy_alias:
-            out["energy_mj"] = out["energy_j"]
-        return out
+        return fn(*args, **kwargs)
     return wrapper

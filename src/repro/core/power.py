@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-import warnings
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -47,21 +46,6 @@ class EnergyReport:
     busy_us_per_pe: np.ndarray            # (num_pes,)
     avg_power_w: float
     makespan_us: float
-
-    # one-release deprecated aliases: the *_mj fields always stored joules
-    @property
-    def total_energy_mj(self) -> float:
-        warnings.warn("EnergyReport.total_energy_mj is deprecated (the field "
-                      "always stored joules); use total_energy_j",
-                      DeprecationWarning, stacklevel=2)
-        return self.total_energy_j
-
-    @property
-    def energy_per_pe_mj(self) -> np.ndarray:
-        warnings.warn("EnergyReport.energy_per_pe_mj is deprecated (the field "
-                      "always stored joules); use energy_per_pe_j",
-                      DeprecationWarning, stacklevel=2)
-        return self.energy_per_pe_j
 
 
 def energy_from_schedule(db: ResourceDB,

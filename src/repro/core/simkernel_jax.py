@@ -3,35 +3,48 @@
 The paper's speed story (system-level simulation ~600× faster than cycle
 accurate gem5) is re-thought for accelerators: instead of making *one*
 event-heap simulation fast, the whole simulator becomes a fixed-shape tensor
-program (``lax.fori_loop`` over decision epochs + masked argmin selects) so
-that **thousands of simulations — seeds × injection rates × SoC configs ×
-schedulers — run batched under ``vmap``/``jit``**.
+program (an epoch-based ``lax.scan`` + masked argmin selects) so that
+**thousands of simulations — seeds × injection rates × SoC configs ×
+schedulers × DTPM policies — run batched under ``vmap``/``jit``**.
 
 Semantics are identical to ``simkernel_ref`` (same epoch ordering, same
 tie-breaking, float32 arithmetic): the two kernels are cross-validated in
-``tests/test_sim_equivalence.py``.
+``tests/test_sim_equivalence.py`` and ``tests/test_dtpm.py``.
 
-Supported here: MET / ETF / table schedulers and *static* DVFS governors
-(performance / powersave / userspace).  The window-sampled ondemand governor
-needs data-dependent re-profiling and lives in the reference kernel only
-(see DESIGN.md §7).
+Supported here: MET / ETF / table schedulers with *static* DVFS governors
+(performance / powersave / userspace — one OPP baked into the tables) **and
+dynamic DTPM policies** (the ondemand family): the epoch scan closes the
+DVFS loop inside the compiled program — each sampling window gathers
+per-cluster utilisation, applies the shared :func:`~repro.core.dvfs.
+ondemand_index` transition, advances the §6 RC thermal network by its exact
+update and clamps clusters above the thermal cap — and execution latency is
+re-indexed from a precomputed (A, T, P, K) OPP table, so ``exec_us`` stays a
+gather, never a re-profile (DESIGN.md §7).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .applications import Application
-from .dvfs import Governor, PerformanceGovernor
+from .dvfs import (Governor, GovernorPolicy, MAX_OPP_LEVELS,
+                   PerformanceGovernor, ondemand_index, padded_ladder,
+                   throttle_index, validate_policy_params)
 from .power import active_power, idle_power
 from .resources import NOMINAL_FREQ, ResourceDB
+from . import thermal as _thermal
 
 BIG = jnp.float32(1e30)
+
+# Frequency domains: one per SoC cluster; make_soc uses 0=big, 1=LITTLE,
+# 2=accelerator fabric.  Padded PE slots map to the last (accel) domain,
+# which never moves (one OPP level) and carries zero power — inert.
+MIN_DOMAINS = 3
 
 
 # --------------------------------------------------------------------------
@@ -50,15 +63,27 @@ class SimTables:
     power_active: jnp.ndarray   # (P,) f32  W while busy
     power_idle: jnp.ndarray     # (P,) f32  W while idle
     table_pe: jnp.ndarray       # (A, T) i32 — table-scheduler assignment (or -1)
-    t_max: int
-    num_pes: int
+    node_of_pe: jnp.ndarray     # (P,) i32 thermal node per PE slot
+    pe_domain: jnp.ndarray      # (P,) i32 frequency domain (cluster) per slot
+    pe_is_cpu: jnp.ndarray      # (P,) f32 1.0 = CPU slot (counts in util)
+    # DTPM-only OPP tables (None for static-governor tables):
+    exec_opp: Optional[jnp.ndarray] = None          # (A, T, P, K) f32
+    power_active_opp: Optional[jnp.ndarray] = None  # (P, K) f32
+    opp_freq: Optional[jnp.ndarray] = None          # (C, K) f32 asc, top-padded
+    num_opp: Optional[jnp.ndarray] = None           # (C,) i32 real level count
+    domain_node: Optional[jnp.ndarray] = None       # (C,) i32 thermal node
+    domain_cpu: Optional[jnp.ndarray] = None        # (C,) f32 CPU PEs per domain
+    t_max: int = 0
+    num_pes: int = 0
 
 
 jax.tree_util.register_dataclass(
     SimTables,
     data_fields=["exec_us", "pred", "ebytes", "valid", "comm_mult",
                  "comm_startup", "comm_inv_bw", "power_active", "power_idle",
-                 "table_pe"],
+                 "table_pe", "node_of_pe", "pe_domain", "pe_is_cpu",
+                 "exec_opp", "power_active_opp", "opp_freq", "num_opp",
+                 "domain_node", "domain_cpu"],
     meta_fields=["t_max", "num_pes"],
 )
 
@@ -67,7 +92,8 @@ def build_tables(db: ResourceDB, apps: Sequence[Application],
                  governor: Optional[Governor] = None,
                  table: Optional[Dict[Tuple[str, int], int]] = None,
                  pad_tasks: Optional[int] = None,
-                 pad_pes: Optional[int] = None) -> SimTables:
+                 pad_pes: Optional[int] = None,
+                 freq_caps: Optional[Mapping[str, float]] = None) -> SimTables:
     """Build device-resident simulation tables for one SoC design.
 
     ``pad_tasks`` / ``pad_pes`` pad the task and PE axes to a fixed size so
@@ -75,8 +101,19 @@ def build_tables(db: ResourceDB, apps: Sequence[Application],
     ``repro.dse.batch``).  Padding is inert by construction: padded task rows
     are invalid (pre-scheduled), padded PE columns carry BIG latency (never
     win an argmin) and zero active/idle power (no energy contribution).
+
+    A *dynamic* governor (``governor.policy().dynamic``) additionally builds
+    the OPP-indexed tables the DTPM kernel gathers from: per-level execution
+    latency ``exec_opp``, per-level active power, and the per-domain OPP
+    frequency ladders.  ``freq_caps`` (pe_type → max GHz) truncates each
+    ladder — the design's hardware envelope; it defaults to the governor's
+    own ``freq_caps`` (attached by ``Scenario.make_governor`` from the
+    design point), keeping ref and jax on the same capped OPP set.
     """
     governor = governor or PerformanceGovernor()
+    dynamic = governor.policy().dynamic
+    if freq_caps is None:
+        freq_caps = getattr(governor, "freq_caps", None)
     A = len(apps)
     T = max(a.num_tasks for a in apps)
     P = db.num_pes
@@ -130,6 +167,21 @@ def build_tables(db: ResourceDB, apps: Sequence[Application],
         p_act[j] = active_power(pe, f)
         p_idle[j] = idle_power(pe)
 
+    # frequency-domain / thermal-node maps (padded slots are inert: zero
+    # power, non-CPU, binned to the accel node/domain by convention)
+    C = max(MIN_DOMAINS, max(pe.cluster for pe in db.pes) + 1)
+    node_of_pe = np.full(P, _thermal.NODE_ACCEL, dtype=np.int32)
+    node_of_pe[:db.num_pes] = _thermal.cluster_nodes(db)
+    pe_domain = np.full(P, C - 1, dtype=np.int32)
+    pe_is_cpu = np.zeros(P, dtype=np.float32)
+    for j, pe in enumerate(db.pes):
+        pe_domain[j] = pe.cluster
+        pe_is_cpu[j] = 1.0 if pe.is_cpu else 0.0
+
+    opp_kw: Dict[str, jnp.ndarray] = {}
+    if dynamic:
+        opp_kw = _build_opp_tables(db, apps, A, T, P, C, freq_caps)
+
     return SimTables(
         exec_us=jnp.asarray(exec_us),
         pred=jnp.asarray(pred), ebytes=jnp.asarray(ebytes),
@@ -138,24 +190,92 @@ def build_tables(db: ResourceDB, apps: Sequence[Application],
         comm_startup=jnp.float32(db.comm.startup_us),
         comm_inv_bw=jnp.float32(1.0 / db.comm.bw_bytes_per_us),
         power_active=jnp.asarray(p_act), power_idle=jnp.asarray(p_idle),
-        table_pe=jnp.asarray(table_pe), t_max=T, num_pes=P)
+        table_pe=jnp.asarray(table_pe),
+        node_of_pe=jnp.asarray(node_of_pe),
+        pe_domain=jnp.asarray(pe_domain),
+        pe_is_cpu=jnp.asarray(pe_is_cpu),
+        t_max=T, num_pes=P, **opp_kw)
+
+
+def _build_opp_tables(db: ResourceDB, apps: Sequence[Application],
+                      A: int, T: int, P: int, C: int,
+                      freq_caps: Optional[Mapping[str, float]]) -> Dict:
+    """The (…, K) OPP-indexed tables the DTPM kernel gathers from.
+
+    Level ladders are ascending and top-padded by repeating the highest real
+    level; ``num_opp`` bounds the real counts (truncated under ``freq_caps``,
+    but never below one level).  ``exec_opp`` quantises exactly like the
+    reference path — f32(base) · f32(nominal/f) — so the two kernels see
+    bit-identical latencies at every OPP.
+    """
+    K = MAX_OPP_LEVELS
+    exec_opp = np.full((A, T, P, K), 1e30, dtype=np.float32)
+    p_act_opp = np.zeros((P, K), dtype=np.float32)
+    opp_freq = np.zeros((C, K), dtype=np.float32)
+    num_opp = np.ones(C, dtype=np.int32)
+    domain_node = np.full(C, _thermal.NODE_ACCEL, dtype=np.int32)
+    domain_cpu = np.zeros(C, dtype=np.float32)
+    nodes = _thermal.cluster_nodes(db)
+    ladders = {pe.pe_type: padded_ladder(pe.pe_type, freq_caps)
+               for pe in db.pes if pe.is_cpu}
+
+    for j, pe in enumerate(db.pes):
+        if pe.is_cpu:
+            _, row, n = ladders[pe.pe_type]
+            c = pe.cluster
+            num_opp[c] = n
+            domain_node[c] = nodes[j]
+            domain_cpu[c] += 1.0
+            for k in range(K):
+                opp_freq[c, k] = row[k]
+                p_act_opp[j, k] = active_power(pe, row[k])
+        else:
+            p_act_opp[j, :] = active_power(pe, 0.0)
+
+    for ai, app in enumerate(apps):
+        lat = db.latency_matrix(app.task_names)
+        for t in range(app.num_tasks):
+            for j, pe in enumerate(db.pes):
+                base = lat[t, j]
+                if not np.isfinite(base):
+                    continue
+                if pe.is_cpu:
+                    _, row, _ = ladders[pe.pe_type]
+                    for k in range(K):
+                        scale = np.float32(NOMINAL_FREQ[pe.pe_type] / row[k])
+                        exec_opp[ai, t, j, k] = np.float32(
+                            np.float32(base) * scale)
+                else:
+                    exec_opp[ai, t, j, :] = np.float32(base)
+
+    return dict(exec_opp=jnp.asarray(exec_opp),
+                power_active_opp=jnp.asarray(p_act_opp),
+                opp_freq=jnp.asarray(opp_freq),
+                num_opp=jnp.asarray(num_opp),
+                domain_node=jnp.asarray(domain_node),
+                domain_cpu=jnp.asarray(domain_cpu))
 
 
 # --------------------------------------------------------------------------
-# The simulation kernel
+# The simulation kernel — one epoch-scan, static DVFS as the degenerate case
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("policy", "num_jobs"))
-def _simulate(tables: SimTables, policy: str, num_jobs: int,
-              arrival: jnp.ndarray, app_idx: jnp.ndarray):
+def _epoch_scan(tables: SimTables, policy: str, num_jobs: int,
+                arrival: jnp.ndarray, app_idx: jnp.ndarray,
+                gov: Optional[GovernorPolicy]):
+    """Shared epoch-scan body: ``gov=None`` compiles the static-OPP program
+    (tables carry the latency/power at the governor's fixed OPP); a dynamic
+    ``GovernorPolicy`` closes the DVFS + thermal loop per sampling window."""
     T, P = tables.t_max, tables.num_pes
     J = num_jobs
+    dtpm = gov is not None
 
     pred_j = tables.pred[app_idx]          # (J, T, T)
     ebytes_j = tables.ebytes[app_idx]      # (J, T, T)
     valid_j = tables.valid[app_idx]        # (J, T)
-    exec_j = tables.exec_us[app_idx]       # (J, T, P)
     table_j = tables.table_pe[app_idx]     # (J, T)
+    if not dtpm:
+        exec_j = tables.exec_us[app_idx]   # (J, T, P)
 
     total = J * T  # static iteration bound: one commit per real task
 
@@ -166,12 +286,58 @@ def _simulate(tables: SimTables, policy: str, num_jobs: int,
         onpe=jnp.zeros((J, T), jnp.int32),
         pe_free=jnp.zeros((P,), jnp.float32),
     )
+    if dtpm:
+        C = tables.opp_freq.shape[0]
+        window = jnp.asarray(gov.sample_window_us, jnp.float32)
+        up = jnp.asarray(gov.up_threshold, jnp.float32)
+        cap = jnp.asarray(gov.thermal_cap_c, jnp.float32)
+        # exact per-window RC update (DESIGN.md §6): unconditionally stable
+        A_rc, B_rc = _thermal.exact_step_matrices_jax(gov.thermal_dt_s)
+        amb = jnp.asarray(_thermal.T_AMBIENT_C, jnp.float32)
+        state.update(
+            onopp=jnp.zeros((J, T), jnp.int32),          # OPP latched at commit
+            opp_idx=jnp.zeros((C,), jnp.int32),          # ondemand starts at fmin
+            next_w=window,
+            temps=jnp.full((4,), _thermal.T_AMBIENT_C, jnp.float32),
+            peak_t=amb,
+        )
 
-    job_ids = jnp.arange(J, dtype=jnp.int32)
     flat_order = (jnp.arange(J, dtype=jnp.int32)[:, None] * T
                   + jnp.arange(T, dtype=jnp.int32)[None, :])      # (J, T)
 
-    def body(_, st):
+    def advance_window(st, carry):
+        """One sampling window: utilisation → governor step, window power →
+        exact RC step, temperature → throttle clamp (ref kernel order)."""
+        opp_idx, next_w, temps, peak = carry
+        w1, w0 = next_w, next_w - window
+        committed = st["scheduled"] & valid_j                      # (J, T)
+        ov = jnp.clip(jnp.minimum(st["finish"], w1)
+                      - jnp.maximum(st["start"], w0), 0.0, window)
+        ov = jnp.where(committed, ov, 0.0)                         # (J, T)
+        dom_oh = jax.nn.one_hot(tables.pe_domain[st["onpe"]],
+                                tables.opp_freq.shape[0],
+                                dtype=jnp.float32)                 # (J, T, C)
+        cpu_w = tables.pe_is_cpu[st["onpe"]]                       # (J, T)
+        busy_dom = jnp.einsum("jt,jtc->c", ov * cpu_w, dom_oh)
+        util = busy_dom / jnp.maximum(window * tables.domain_cpu, 1e-9)
+        proposed = ondemand_index(tables.opp_freq, tables.num_opp, up, util,
+                                  xp=jnp)
+        # realised per-node window power: active at the latched OPP + idle
+        pe_oh = jax.nn.one_hot(st["onpe"], P, dtype=jnp.float32)   # (J, T, P)
+        p_task = tables.power_active_opp[st["onpe"], st["onopp"]]  # (J, T)
+        e_act = jnp.einsum("jt,jtp->p", ov * p_task, pe_oh)        # (P,) W·us
+        busy_pe = jnp.einsum("jt,jtp->p", ov, pe_oh)
+        idle_frac = 1.0 - jnp.clip(busy_pe / window, 0.0, 1.0)
+        p_pe = e_act / window + tables.power_idle * idle_frac      # (P,) W
+        node_oh = jax.nn.one_hot(tables.node_of_pe, _thermal.NUM_NODES,
+                                 dtype=jnp.float32)                # (P, 3)
+        temps = _thermal.exact_step_jax(temps, p_pe @ node_oh, A_rc, B_rc)
+        peak = jnp.maximum(peak, jnp.max(temps[:3]))
+        opp_idx = throttle_index(proposed, temps[tables.domain_node], cap,
+                                 xp=jnp)
+        return opp_idx, next_w + window, temps, peak
+
+    def body(st, _):
         scheduled, finish = st["scheduled"], st["finish"]
         # 1. eligibility: job tasks whose preds are all committed
         preds_open = jnp.any(pred_j & ~scheduled[:, None, :], axis=-1)   # (J, T)
@@ -187,23 +353,38 @@ def _simulate(tables: SimTables, policy: str, num_jobs: int,
         j, t = pick // T, pick % T
         any_left = rmin < BIG * 0.5
 
+        # 3b. DVFS windows elapsed before this epoch close the loop: the
+        # governor transition + thermal feedback run, then latency re-indexes
+        if dtpm:
+            now = jnp.where(any_left, rmin, -BIG)
+            opp_idx, next_w, temps, peak = jax.lax.while_loop(
+                lambda c: c[1] <= now,
+                functools.partial(advance_window, st),
+                (st["opp_idx"], st["next_w"], st["temps"], st["peak_t"]))
+            st = dict(st, opp_idx=opp_idx, next_w=next_w, temps=temps,
+                      peak_t=peak)
+            opp_of_pe = opp_idx[tables.pe_domain]                     # (P,)
+            ex = tables.exec_opp[app_idx[j], t][jnp.arange(P), opp_of_pe]
+        else:
+            ex = exec_j[j, t]                                         # (P,)
+
         # 4. per-PE data-ready with comm from producer PEs
         onpe_row = st["onpe"][j]                                        # (T,)
         mult = tables.comm_mult[onpe_row]                               # (T, P)
         base = tables.comm_startup + ebytes_j[j, t] * tables.comm_inv_bw  # (T,)
         comm = mult * base[:, None]                                     # (T, P)
-        pf_row = jnp.where(pred_j[j, t], finish[j], -BIG)               # (T,)
+        pf_row = jnp.where(pred_j[j, t], st["finish"][j], -BIG)         # (T,)
         data_ready = jnp.maximum(
             rmin, jnp.max(pf_row[:, None] + comm, axis=0))              # (P,)
         start_c = jnp.maximum(data_ready, st["pe_free"])                # (P,)
-        fin_c = start_c + exec_j[j, t]                                  # (P,)
+        fin_c = start_c + ex                                            # (P,)
 
         # 5. policy
         if policy == "etf":
             pe = jnp.argmin(fin_c).astype(jnp.int32)
         elif policy == "met":
             # canonical MET: min execution time, availability ignored
-            ex = exec_j[j, t]   # DVFS-scaled, matching the reference scheduler
+            # (DVFS-scaled at the current OPP, matching the reference)
             pe = jnp.argmin(ex).astype(jnp.int32)
         elif policy == "table":
             pe = table_j[j, t]
@@ -212,44 +393,85 @@ def _simulate(tables: SimTables, policy: str, num_jobs: int,
 
         # 6. commit (no-op when nothing eligible — padding iterations)
         s0 = jnp.maximum(data_ready[pe], st["pe_free"][pe])
-        f0 = s0 + exec_j[j, t, pe]
+        f0 = s0 + ex[pe]
 
         def commit(st):
-            return dict(
+            new = dict(
+                st,
                 scheduled=st["scheduled"].at[j, t].set(True),
                 finish=st["finish"].at[j, t].set(f0),
                 start=st["start"].at[j, t].set(s0),
                 onpe=st["onpe"].at[j, t].set(pe),
                 pe_free=st["pe_free"].at[pe].set(f0),
             )
+            if dtpm:
+                new["onopp"] = st["onopp"].at[j, t].set(opp_of_pe[pe])
+            return new
 
-        return jax.lax.cond(any_left, commit, lambda s: s, st)
+        return jax.lax.cond(any_left, commit, lambda s: s, st), None
 
-    st = jax.lax.fori_loop(0, total, body, state)
+    st, _ = jax.lax.scan(body, state, None, length=total)
 
     busy = st["finish"] - st["start"]                                   # (J, T)
     makespan = jnp.max(jnp.where(valid_j, st["finish"], 0.0))
+    if dtpm:
+        # drain the windows between the last decision epoch and the makespan
+        # so peak_temp_c covers the schedule's execution tail, including the
+        # final partial window (its start precedes the makespan; no further
+        # commits happen, so this cannot perturb ref<->jax schedule parity)
+        opp_idx, next_w, temps, peak = jax.lax.while_loop(
+            lambda c: c[1] - window < makespan,
+            functools.partial(advance_window, st),
+            (st["opp_idx"], st["next_w"], st["temps"], st["peak_t"]))
+        st = dict(st, opp_idx=opp_idx, next_w=next_w, temps=temps,
+                  peak_t=peak)
     job_finish = jnp.max(jnp.where(valid_j, st["finish"], 0.0), axis=1)
     avg_latency = jnp.mean(job_finish - arrival)
     # energy: active while busy + idle leakage elsewhere  (uJ = W * us)
-    e_active = jnp.sum(
-        jnp.where(valid_j, busy, 0.0)[..., None]
-        * (jax.nn.one_hot(st["onpe"], tables.num_pes, dtype=jnp.float32)
-           * jnp.where(valid_j, 1.0, 0.0)[..., None])
-        * tables.power_active[None, None, :])
+    onpe_oh = (jax.nn.one_hot(st["onpe"], tables.num_pes, dtype=jnp.float32)
+               * jnp.where(valid_j, 1.0, 0.0)[..., None])
+    if dtpm:
+        p_task = tables.power_active_opp[st["onpe"], st["onopp"]]       # (J, T)
+        e_active = jnp.sum(jnp.where(valid_j, busy * p_task, 0.0))
+    else:
+        e_active = jnp.sum(jnp.where(valid_j, busy, 0.0)[..., None]
+                           * onpe_oh * tables.power_active[None, None, :])
     busy_per_pe = jnp.sum(
-        jnp.where(valid_j, busy, 0.0)[..., None]
-        * jax.nn.one_hot(st["onpe"], tables.num_pes, dtype=jnp.float32)
-        * jnp.where(valid_j, 1.0, 0.0)[..., None], axis=(0, 1))
+        jnp.where(valid_j, busy, 0.0)[..., None] * onpe_oh, axis=(0, 1))
     e_idle = jnp.sum(tables.power_idle * jnp.maximum(makespan - busy_per_pe, 0.0))
     energy_j = (e_active + e_idle) * 1e-6                # W·us -> J
 
-    return dict(
+    out = dict(
         finish=st["finish"], start=st["start"], onpe=st["onpe"],
         scheduled=st["scheduled"], job_finish=job_finish,
         makespan_us=makespan, avg_job_latency_us=avg_latency,
         energy_j=energy_j, busy_per_pe_us=busy_per_pe,
     )
+    if dtpm:
+        out.update(onopp=st["onopp"], opp_idx=st["opp_idx"],
+                   peak_temp_c=st["peak_t"])
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "num_jobs"))
+def _simulate(tables: SimTables, policy: str, num_jobs: int,
+              arrival: jnp.ndarray, app_idx: jnp.ndarray):
+    if tables.exec_opp is not None:
+        # dynamic-built tables bake exec_us at the governor's initial (fmin)
+        # OPP — the static kernel would return plausible but wrong numbers
+        raise ValueError("tables were built for a dynamic governor; run "
+                         "them through simulate_jax_dtpm (DESIGN.md §7)")
+    return _epoch_scan(tables, policy, num_jobs, arrival, app_idx, None)
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "num_jobs"))
+def _simulate_dtpm(tables: SimTables, policy: str, num_jobs: int,
+                   arrival: jnp.ndarray, app_idx: jnp.ndarray,
+                   gov: GovernorPolicy):
+    if tables.exec_opp is None:
+        raise ValueError("tables lack OPP ladders; build them with the "
+                         "dynamic governor (build_tables(governor=...))")
+    return _epoch_scan(tables, policy, num_jobs, arrival, app_idx, gov)
 
 
 def simulate_jax(tables: SimTables, policy: str, arrival: np.ndarray,
@@ -258,6 +480,28 @@ def simulate_jax(tables: SimTables, policy: str, arrival: np.ndarray,
     return _simulate(tables, policy, int(arrival.shape[0]),
                      jnp.asarray(arrival, jnp.float32),
                      jnp.asarray(app_idx, jnp.int32))
+
+
+def simulate_jax_dtpm(tables: SimTables, policy: str, arrival: np.ndarray,
+                      app_idx: np.ndarray, gov: GovernorPolicy):
+    """Single closed-loop DTPM simulation under a dynamic governor policy.
+
+    The output dict gains ``onopp`` (the OPP index latched per task),
+    ``opp_idx`` (final per-domain OPP) and ``peak_temp_c`` — the peak on-chip
+    temperature from the inline RC loop the throttle feedback integrates.
+    Windows advance lazily at decision epochs (mirroring the reference
+    kernel), then drain to the makespan after the last commit so the peak
+    covers the schedule's execution tail; throttle decisions during the
+    drain are moot (nothing is left to schedule).
+    """
+    if not gov.dynamic:
+        raise ValueError("static governors bake into the tables; use "
+                         "simulate_jax (DESIGN.md §7)")
+    validate_policy_params(gov.sample_window_us, gov.up_threshold,
+                           gov.thermal_dt_s)
+    return _simulate_dtpm(tables, policy, int(arrival.shape[0]),
+                          jnp.asarray(arrival, jnp.float32),
+                          jnp.asarray(app_idx, jnp.int32), gov)
 
 
 def simulate_batch(tables: SimTables, policy: str, arrival: np.ndarray,

@@ -29,11 +29,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .applications import Application
-from .dvfs import Governor, PerformanceGovernor
+from .dvfs import Governor, PerformanceGovernor, capped_levels, throttle_index
 from .jobgen import JobTrace
-from .power import EnergyReport, energy_from_schedule
+from .power import EnergyReport, active_power, energy_from_schedule, idle_power
 from .resources import CPU_TYPES, NOMINAL_FREQ, PE, ResourceDB
 from .schedulers import SchedContext, Scheduler
+from . import thermal as _thermal
 
 
 @dataclasses.dataclass
@@ -103,26 +104,79 @@ def simulate(db: ResourceDB, apps: Sequence[Application], trace: JobTrace,
                 out[j] = NOMINAL_FREQ[pe.pe_type] / freq[pe.cluster]
         return out
 
-    # ondemand bookkeeping
-    window_us = getattr(governor, "sample_window_us", None)
+    # ondemand / DTPM bookkeeping — semantics shared with the JAX kernel via
+    # the array-form GovernorPolicy (governor.update delegates to
+    # dvfs.ondemand_index; the throttle calls dvfs.throttle_index)
+    pol = governor.policy()
+    window_us = (pol.sample_window_us if pol.dynamic
+                 else getattr(governor, "sample_window_us", None))
     next_window_end = window_us if window_us else np.inf
     committed: List[TaskRecord] = []
 
+    throttle = pol.dynamic and np.isfinite(pol.thermal_cap_c)
+    caps = getattr(governor, "freq_caps", None)
+    # loop invariants of the per-window scans, hoisted: CPU PEs per cluster,
+    # capped OPP ladders, thermal node maps
+    cl_pes = {c: [pe.pe_id for pe in db.pes
+                  if pe.cluster == c and pe.is_cpu] for c in clusters}
+    if throttle:
+        rc_ab = _thermal.exact_step_matrices(pol.thermal_dt_s)
+        temps = np.full(4, _thermal.T_AMBIENT_C)
+        node_of_pe = _thermal.cluster_nodes(db)
+        cl_node = {c: int(node_of_pe[cl_pes[c][0]]) for c in clusters}
+        cl_opps = {c: capped_levels(cl_type[c], caps) for c in clusters}
+
     def window_util(cluster: int, w0: float, w1: float) -> float:
-        pes_in = [pe.pe_id for pe in db.pes if pe.cluster == cluster and pe.is_cpu]
+        pes_in = cl_pes[cluster]
         busy = 0.0
         for r in committed:
             if r.pe_id in pes_in:
                 busy += max(0.0, min(r.finish_us, w1) - max(r.start_us, w0))
         return busy / max((w1 - w0) * len(pes_in), 1e-9)
 
+    def window_node_power(w0: float, w1: float) -> np.ndarray:
+        """Realised per-thermal-node power (W) over one sampling window:
+        active at each task's latched frequency, idle leakage elsewhere."""
+        p = np.zeros(_thermal.NUM_NODES)
+        busy = np.zeros(n_pes)
+        width = w1 - w0
+        for r in committed:
+            ov = max(0.0, min(r.finish_us, w1) - max(r.start_us, w0))
+            if ov <= 0.0:
+                continue
+            pe = db.pes[r.pe_id]
+            p[node_of_pe[r.pe_id]] += active_power(pe, r.freq_ghz) * ov / width
+            busy[r.pe_id] += ov
+        for j, pe in enumerate(db.pes):
+            idle_frac = 1.0 - min(max(busy[j] / width, 0.0), 1.0)
+            p[node_of_pe[j]] += idle_power(pe) * idle_frac
+        return p
+
     def advance_windows(now: float) -> None:
-        nonlocal next_window_end
+        nonlocal next_window_end, temps
         while window_us and next_window_end <= now:
             w0 = next_window_end - window_us
+            new_freq = {}
             for c in clusters:
                 u = window_util(c, w0, next_window_end)
-                freq[c] = governor.update(cl_type[c], freq[c], u)
+                new_freq[c] = governor.update(cl_type[c], freq[c], u)
+            if throttle:
+                p = window_node_power(w0, next_window_end)
+                temps = _thermal.exact_step(temps, p, *rc_ab)
+                for c in clusters:
+                    opps = cl_opps[c]
+                    # nearest-level handoff (update() returns a ladder entry)
+                    cur = min(range(len(opps)),
+                              key=lambda i: abs(opps[i] - new_freq[c]))
+                    idx = throttle_index(
+                        np.asarray([cur]),
+                        np.asarray([temps[cl_node[c]]]), pol.thermal_cap_c)
+                    new_freq[c] = opps[int(idx[0])]
+            freq.update(new_freq)
+            # records drained before this boundary can never overlap a later
+            # window — prune so the scans stay O(in-flight), not O(history)
+            committed[:] = [r for r in committed
+                            if r.finish_us > next_window_end]
             next_window_end += window_us
 
     # per-job task state

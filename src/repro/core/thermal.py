@@ -69,6 +69,64 @@ class ThermalState:
         return cls(np.full(3, T_AMBIENT_C), T_AMBIENT_C)
 
 
+def rc_state_matrix() -> np.ndarray:
+    """(4, 4) continuous-time state matrix M of the linear RC network.
+
+    dx/dt = M x + u with x = [T_big, T_little, T_accel, T_board] and
+    u = [P/C_node..., T_amb/(R_b·C_b)].  Shared by the numpy reference, the
+    ``dse.thermal_jax`` batched pipeline and the DTPM simulation kernels —
+    one definition, three integrators.
+    """
+    a = 1.0 / (R_TO_BOARD * C_NODE)                               # (3,)
+    top = np.concatenate([np.diag(-a), a[:, None]], axis=1)       # (3, 4)
+    b_in = 1.0 / (R_TO_BOARD * C_BOARD)                           # (3,)
+    b_out = -(np.sum(1.0 / R_TO_BOARD) + 1.0 / R_BOARD_AMB) / C_BOARD
+    bottom = np.concatenate([b_in, [b_out]])[None]                # (1, 4)
+    return np.concatenate([top, bottom], axis=0)
+
+
+def exact_step_matrices(dt_s: float) -> Tuple[np.ndarray, np.ndarray]:
+    """(A, B) of the exact piecewise-constant update x' = A x + B u.
+
+    A = e^{M·dt}, B = M⁻¹(e^{M·dt} − I): unconditionally stable for any step
+    width (DESIGN.md §6) — this is the per-window update the DTPM governors'
+    thermal-throttle feedback integrates inside both simulation kernels.
+    """
+    import scipy.linalg
+    M = rc_state_matrix()
+    A = scipy.linalg.expm(M * float(dt_s))
+    B = np.linalg.solve(M, A - np.eye(4))
+    return A, B
+
+
+def exact_step(temps: np.ndarray, power_w: np.ndarray,
+               A: np.ndarray, B: np.ndarray) -> np.ndarray:
+    """Advance the (4,) [nodes..., board] state one window under (3,) power."""
+    u = np.concatenate([np.asarray(power_w, np.float64) / C_NODE,
+                        [T_AMBIENT_C / (R_BOARD_AMB * C_BOARD)]])
+    return A @ np.asarray(temps, np.float64) + B @ u
+
+
+def exact_step_matrices_jax(dt_s):
+    """Traceable (jnp) twin of :func:`exact_step_matrices` — the single
+    definition the DTPM kernel and ``dse.thermal_jax`` consume."""
+    import jax
+    import jax.numpy as jnp
+    M = jnp.asarray(rc_state_matrix(), jnp.float32)
+    A = jax.scipy.linalg.expm(M * jnp.asarray(dt_s, jnp.float32))
+    B = jnp.linalg.solve(M, A - jnp.eye(4, dtype=A.dtype))
+    return A, B
+
+
+def exact_step_jax(temps, power_w, A, B):
+    """Traceable twin of :func:`exact_step` on (4,) temps / (3,) node power."""
+    import jax.numpy as jnp
+    u = jnp.concatenate([
+        jnp.asarray(power_w, jnp.float32) / jnp.asarray(C_NODE, jnp.float32),
+        jnp.full((1,), T_AMBIENT_C / (R_BOARD_AMB * C_BOARD), jnp.float32)])
+    return A @ temps + B @ u
+
+
 def step(state: ThermalState, power_w: np.ndarray, dt_s: float) -> ThermalState:
     """One forward-Euler step.  ``power_w``: (3,) per-cluster power."""
     flow = (state.t_node_c - state.t_board_c) / R_TO_BOARD

@@ -34,8 +34,7 @@ from .thermal_jax import (binned_power_trace, peak_temperature,
 
 simulate_design_batch = _deprecated_entry_point(
     _simulate_design_batch_impl,
-    "repro.scenario.sweep(Scenario(...), axes={'design': ..., ...})",
-    energy_alias=True)
+    "repro.scenario.sweep(Scenario(...), axes={'design': ..., ...})")
 
 
 __all__ = [n for n in dir() if not n.startswith("_")]

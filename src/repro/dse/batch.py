@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.applications import Application
+from ..core.dvfs import Governor
 from ..core.jobgen import JobTrace
 from ..core.simkernel_jax import SimTables, _simulate, build_tables
 from ..core.thermal import NODE_ACCEL, cluster_nodes
@@ -40,6 +41,11 @@ class DesignBatch:
     def num_designs(self) -> int:
         return len(self.points)
 
+    @property
+    def dynamic(self) -> bool:
+        """True when the tables carry OPP ladders for dynamic DTPM policies."""
+        return self.tables.exec_opp is not None
+
 
 def stack_tables(tables: Sequence[SimTables]) -> SimTables:
     """Leaf-wise stack of identically-shaped SimTables into (D, …) tensors."""
@@ -60,8 +66,17 @@ def pad_node_map(dbs, pad_pes: int) -> jnp.ndarray:
 
 def build_design_batch(points: Sequence[DesignPoint],
                        apps: Sequence[Application],
-                       pad_pes: Optional[int] = None) -> DesignBatch:
-    """Build + pad + stack the simulation tables for a list of designs."""
+                       pad_pes: Optional[int] = None,
+                       governor: Optional[Governor] = None) -> DesignBatch:
+    """Build + pad + stack the simulation tables for a list of designs.
+
+    By default every design bakes its own frequency-cap (userspace) governor
+    — the static-DVFS slice of the space.  Passing a *dynamic* ``governor``
+    (the ondemand family) instead builds the OPP-indexed tables the DTPM
+    kernel gathers from, with each design's OPP ladder truncated at its
+    per-cluster frequency caps — so Pareto search ranks dynamic policies
+    under the design's static envelope, not just static caps.
+    """
     if not points:
         raise ValueError("empty design list")
     dbs = [p.to_db() for p in points]
@@ -70,8 +85,21 @@ def build_design_batch(points: Sequence[DesignPoint],
         if pad_pes < P:
             raise ValueError(f"pad_pes={pad_pes} < widest design {P}")
         P = pad_pes
-    per_design = [build_tables(db, apps, governor=p.governor(), pad_pes=P)
-                  for p, db in zip(points, dbs)]
+    if governor is not None:
+        if not governor.policy().dynamic:
+            # a uniform static governor would silently override the
+            # per-design frequency caps the sweep contract assumes
+            raise ValueError(
+                "build_design_batch bakes per-design frequency caps; pass "
+                "a dynamic (ondemand-family) governor to add OPP ladders, "
+                "or None for the static design-cap tables")
+        per_design = [
+            build_tables(db, apps, governor=governor, pad_pes=P,
+                         freq_caps=p.freq_caps())
+            for p, db in zip(points, dbs)]
+    else:
+        per_design = [build_tables(db, apps, governor=p.governor(), pad_pes=P)
+                      for p, db in zip(points, dbs)]
     return DesignBatch(points=tuple(points), tables=stack_tables(per_design),
                        node_of_pe=pad_node_map(dbs, P))
 

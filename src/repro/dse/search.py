@@ -15,7 +15,6 @@ batch on a trace subset before paying for the full evaluation.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -44,14 +43,6 @@ class EvalResult:
     def num_designs(self) -> int:
         return len(self.points)
 
-    @property
-    def energy_mj(self) -> np.ndarray:
-        """Deprecated alias: the field always stored joules."""
-        warnings.warn("EvalResult.energy_mj is deprecated (the field always "
-                      "stored joules); use energy_j",
-                      DeprecationWarning, stacklevel=2)
-        return self.energy_j
-
     def objectives(self) -> np.ndarray:
         """(D, 3) cost matrix (all minimised) in OBJECTIVES order."""
         return np.stack([self.avg_latency_us, self.energy_j,
@@ -78,24 +69,55 @@ def evaluate(points: Sequence[DesignPoint], apps: Sequence[Application],
              traces: Sequence[JobTrace], policy: str = "etf",
              thermal_bins: int = 32, thermal_repeats: int = 3,
              pad_pes: Optional[int] = None,
-             batch: Optional[DesignBatch] = None) -> EvalResult:
+             batch: Optional[DesignBatch] = None,
+             governor: str = "design",
+             governor_params: Tuple[Tuple[str, float], ...] = ()) -> EvalResult:
     """Evaluate D designs × S traces in one vmapped/jitted call per policy.
 
     ``pad_pes`` fixes the padded PE width so successive calls with different
     design mixes reuse the same compiled program (jit cache hit).
+
+    ``governor`` widens the DVFS axis of the search: the default ``"design"``
+    pins each design's static frequency caps; a *dynamic* governor
+    (``"ondemand"`` / ``"throttle"``, parameterised via ``governor_params``)
+    ranks closed-loop DTPM policies instead — the stacked tables gain the
+    OPP dimension (each design's ladder truncated at its caps) and peak
+    temperature comes from the kernel's inline RC loop, so
+    ``thermal_bins``/``thermal_repeats`` only shape the static path.
     """
     # lazy import: repro.scenario builds on repro.dse, not the reverse
     from ..scenario import Scenario, ThermalSpec
     from ..scenario.sweep import sweep
 
+    governor_params = tuple(governor_params)
+    base = Scenario(apps=tuple(apps), scheduler=policy, governor=governor,
+                    governor_params=governor_params,
+                    thermal=ThermalSpec(bins=thermal_bins,
+                                        repeats=thermal_repeats))
+    dynamic = base.make_policy().dynamic
+    if dynamic and "thermal_dt_s" not in dict(governor_params):
+        # real-time RC integration keeps millisecond traces at ambient,
+        # collapsing the temperature objective to float noise — default the
+        # thermal dilation to the throttle governor's 50 ms so peak_temp_c
+        # actually separates designs (override via governor_params)
+        governor_params += (("thermal_dt_s", 0.05),)
+        base = dataclasses.replace(base, governor_params=governor_params)
+    if not dynamic and governor != "design":
+        raise ValueError(
+            "static DVFS points are the design axis itself — use "
+            "governor='design' (per-design frequency caps) or a dynamic "
+            "governor ('ondemand'/'throttle') for DTPM-policy ranking")
     if batch is None:
-        batch = build_design_batch(points, apps, pad_pes=pad_pes)
+        batch = build_design_batch(
+            points, apps, pad_pes=pad_pes,
+            governor=base.make_governor() if dynamic else None)
     elif tuple(points) != batch.points:
         raise ValueError("points does not match batch.points — pass the same "
                          "design list the batch was built from")
-    base = Scenario(apps=tuple(apps), scheduler=policy, governor="design",
-                    thermal=ThermalSpec(bins=thermal_bins,
-                                        repeats=thermal_repeats))
+    if batch.dynamic != dynamic:
+        raise ValueError(
+            "design batch and governor disagree: rebuild the batch with "
+            "build_design_batch(..., governor=...) matching the governor")
     sr = sweep(base, axes={"design": list(batch.points),
                            "trace": list(traces)},
                backend="jax", design_batch=batch)

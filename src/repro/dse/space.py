@@ -80,10 +80,15 @@ class DesignPoint:
         return make_soc(self.num_big, self.num_little, self.num_scr,
                         self.num_fft, self.num_vit, comm=comm)
 
+    def freq_caps(self) -> Dict[str, float]:
+        """Per-type frequency caps — the design's hardware envelope, shared
+        by the static userspace governor and the dynamic governors' OPP
+        ladder truncation (one source for both backends)."""
+        return {CPU_BIG: self.big_freq_ghz, CPU_LITTLE: self.little_freq_ghz}
+
     def governor(self) -> UserspaceGovernor:
         """Frequency caps as a userspace governor (static DVFS point)."""
-        return UserspaceGovernor({CPU_BIG: self.big_freq_ghz,
-                                  CPU_LITTLE: self.little_freq_ghz})
+        return UserspaceGovernor(self.freq_caps())
 
 
 # Axis order is part of the public contract: grid() enumerates in this order

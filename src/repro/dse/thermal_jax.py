@@ -99,16 +99,18 @@ def binned_power_trace(start_us: jnp.ndarray, finish_us: jnp.ndarray,
     return power_pe @ node_onehot, dt_us * 1e-6
 
 
-def _rc_state_matrix() -> jnp.ndarray:
-    """(4, 4) continuous-time state matrix M of the linear RC network:
-    dx/dt = M x + u, with x = [T_big, T_little, T_accel, T_board] and
-    u = [P/C_node..., T_amb/(R_b·C_b)]."""
-    a = 1.0 / (R_TO_BOARD * C_NODE)                        # (3,)
-    top = jnp.concatenate([jnp.diag(-a), a[:, None]], axis=1)       # (3, 4)
-    b_in = 1.0 / (R_TO_BOARD * C_BOARD)                    # (3,)
-    b_out = -(jnp.sum(1.0 / R_TO_BOARD) + 1.0 / R_BOARD_AMB) / C_BOARD
-    bottom = jnp.concatenate([b_in, jnp.asarray(b_out)[None]])[None]  # (1, 4)
-    return jnp.concatenate([top, bottom], axis=0)
+def rc_state_matrix() -> jnp.ndarray:
+    """(4, 4) continuous-time state matrix M of the linear RC network —
+    the jnp view of :func:`repro.core.thermal.rc_state_matrix` (one
+    definition shared with the reference integrator and the DTPM kernels)."""
+    return jnp.asarray(_ref.rc_state_matrix(), jnp.float32)
+
+
+def exact_step_matrices(dt_s) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(A, B) of the exact piecewise-constant update x' = A x + B u — the
+    ``lax``-traceable twin of ``repro.core.thermal.exact_step_matrices``
+    (one definition, shared with the DTPM kernel's inline thermal loop)."""
+    return _ref.exact_step_matrices_jax(dt_s)
 
 
 def peak_temperature(power_trace_w: jnp.ndarray, dt_s: jnp.ndarray,
@@ -123,10 +125,7 @@ def peak_temperature(power_trace_w: jnp.ndarray, dt_s: jnp.ndarray,
     be assumed here).
     """
     power_trace_w = jnp.asarray(power_trace_w, jnp.float32)
-    dt = jnp.asarray(dt_s, jnp.float32)
-    M = _rc_state_matrix()
-    A = jax.scipy.linalg.expm(M * dt)
-    B = jnp.linalg.solve(M, A - jnp.eye(4, dtype=A.dtype))
+    A, B = exact_step_matrices(dt_s)
     amb_drive = T_AMBIENT_C / (R_BOARD_AMB * C_BOARD)
     t0 = steady_state(jnp.mean(power_trace_w, axis=0))
     K = power_trace_w.shape[0]

@@ -22,7 +22,7 @@ from typing import Dict, Optional, Tuple, Union
 import jax
 
 from ..core.applications import Application, get_application
-from ..core.dvfs import Governor, OndemandGovernor, get_governor
+from ..core.dvfs import Governor, GovernorPolicy, get_governor
 from ..core.jobgen import JobTrace, deterministic_trace, poisson_trace
 from ..core.resources import ResourceDB
 from ..core.schedulers import (Scheduler, TableScheduler, get_scheduler,
@@ -58,7 +58,14 @@ class TraceSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ThermalSpec:
-    """RC thermal co-simulation settings (see DESIGN.md §6)."""
+    """RC thermal co-simulation settings (see DESIGN.md §6).
+
+    Consulted by the *static*-governor jax path only (the post-hoc binned
+    peak-temperature scan).  Dynamic (ondemand-family) scenarios integrate
+    temperature inside the kernel's DVFS loop instead — their resolution is
+    the governor's ``sample_window_us`` / ``thermal_dt_s`` (DESIGN.md §7),
+    and ``bins``/``repeats`` have no effect.
+    """
     bins: int = 32              # power-trace time bins per schedule
     repeats: int = 3            # periods scanned past the steady-state start
 
@@ -74,7 +81,9 @@ class Scenario:
       scheduler   — ``"met" | "etf" | "table"`` (table = offline ILP solve);
       governor    — DVFS governor name (``repro.core.dvfs.GOVERNORS``) or
                     ``"design"`` for a userspace governor pinned to the
-                    design point's per-cluster frequency caps;
+                    design point's per-cluster frequency caps; dynamic
+                    governors (``ondemand``/``throttle``) run the closed
+                    DTPM loop on either backend (DESIGN.md §7);
       governor_params — extra governor kwargs as a hashable (key, value)
                     tuple, e.g. ``(("up_threshold", 0.9),)``;
       thermal     — peak-temperature evaluation settings;
@@ -107,8 +116,28 @@ class Scenario:
 
     def make_governor(self) -> Governor:
         if self.governor == "design":
+            if self.governor_params:
+                raise ValueError(
+                    "governor='design' takes no governor_params (the design "
+                    "point pins the frequency caps); name an explicit "
+                    "governor to parameterise one")
             return self.design.governor()      # frequency-cap userspace
-        return get_governor(self.governor, **dict(self.governor_params))
+        gov = get_governor(self.governor, **dict(self.governor_params))
+        if gov.policy().dynamic:
+            # dynamic policies range over the design's hardware envelope:
+            # the OPP ladder stops at the per-cluster frequency caps, on
+            # both backends (capped_levels / build_tables(freq_caps=…))
+            gov.freq_caps = self.design.freq_caps()
+        return gov
+
+    def make_policy(self) -> GovernorPolicy:
+        """The governor's array-form per-window transition (DESIGN.md §7).
+
+        ``policy.dynamic`` selects the kernel branch on the JAX backend:
+        static governors bake one OPP into the tables, the ondemand family
+        runs the closed DVFS + thermal loop inside the epoch scan.
+        """
+        return self.make_governor().policy()
 
     def schedule_table(self) -> Optional[Dict[Tuple[str, int], int]]:
         """The offline ILP table for ``scheduler="table"`` (cached), else None."""
@@ -155,21 +184,6 @@ def _solve_table_cached(design: DesignPoint,
                 for a in apps):
         table.update(solve_optimal_table(db, app))
     return table
-
-
-def static_governor_or_raise(scn: Scenario) -> Governor:
-    """The scenario's governor, rejecting window-sampled ones for JAX.
-
-    The JAX kernel supports static OPPs only (DESIGN.md §7); ondemand needs
-    data-dependent re-profiling and lives in the reference kernel.
-    """
-    gov = scn.make_governor()
-    if isinstance(gov, OndemandGovernor):
-        raise ValueError(
-            "the JAX backend supports static governors only "
-            "(performance/powersave/userspace/design); run ondemand "
-            "scenarios with backend='ref' (DESIGN.md §7)")
-    return gov
 
 
 # All fields are static metadata: flattening yields no array leaves, so a

@@ -7,10 +7,15 @@ backend-native output (``SimResult`` or the JAX output dict) stays reachable
 via ``raw``.  :class:`SweepResult` is the batched counterpart: every metric
 is an ndarray shaped like the sweep's axes cross-product.
 
-Peak temperature is backend-specific by necessity: the JAX backend runs the
-binned RC co-simulation (DESIGN.md §6), the reference backend reports the
-analytical steady state of the schedule's realised per-node power split —
-both upper-bound views of the same lumped network.
+Peak temperature is backend-specific by necessity: for static governors the
+JAX backend runs the binned RC co-simulation (DESIGN.md §6) while the
+reference backend reports the analytical steady state of the schedule's
+realised per-node power split — both upper-bound views of the same lumped
+network.  Dynamic (ondemand-family) scenarios on the JAX backend report the
+peak of the kernel's *inline* RC loop instead — an ambient-start transient
+at the governor's ``thermal_dt_s`` resolution (DESIGN.md §7); on
+millisecond traces it stays near ambient unless ``thermal_dt_s`` dilates
+thermal time, so compare it across policies, not across backends.
 """
 from __future__ import annotations
 

@@ -23,7 +23,7 @@ from ..core import simkernel_ref as _refk
 from ..core.simkernel_jax import SimTables
 from ..core.thermal import cluster_nodes
 from ..dse import thermal_jax as _thermal_jax
-from .config import Scenario, ThermalSpec, TraceSpec, static_governor_or_raise
+from .config import Scenario, ThermalSpec, TraceSpec
 from .result import Result
 
 BACKENDS = ("ref", "jax")
@@ -34,17 +34,24 @@ def _tables_key(scn: Scenario) -> Scenario:
 
     The scheduler only shapes tables through the offline ILP table, so all
     non-"table" policies collapse to one cache entry per design/governor.
+    Dynamic (ondemand-family) governors collapse further: their OPP ladders
+    depend on the design and applications alone, so every policy
+    parameterisation shares one table set.
     """
     scheduler = scn.scheduler if scn.scheduler == "table" else "etf"
-    return dataclasses.replace(scn, trace=TraceSpec(), failures=(),
-                               thermal=ThermalSpec(), scheduler=scheduler)
+    key = dataclasses.replace(scn, trace=TraceSpec(), failures=(),
+                              thermal=ThermalSpec(), scheduler=scheduler)
+    if key.make_policy().dynamic:
+        key = dataclasses.replace(key, governor="ondemand",
+                                  governor_params=())
+    return key
 
 
 @functools.lru_cache(maxsize=256)
 def _cached_tables(key: Scenario, pad_pes: Optional[int]) -> SimTables:
     db = key.soc()
     return _jaxk.build_tables(db, key.applications(),
-                              governor=static_governor_or_raise(key),
+                              governor=key.make_governor(),
                               table=key.schedule_table(), pad_pes=pad_pes)
 
 
@@ -76,8 +83,11 @@ def run(scenario: Scenario, backend: str = "ref", *,
 
     ``backend="ref"``: the event-heap reference kernel — all governors and
     fail-stop injection supported.  ``backend="jax"``: the vectorised kernel
-    — static governors, no failures, plus the RC peak-temperature
-    co-simulation.  Both return the same :class:`Result` surface.
+    — every governor, static or dynamic: static governors bake one OPP into
+    the tables and report the binned RC co-simulation's peak temperature;
+    the ondemand family runs the closed DTPM loop inside the epoch scan and
+    reports the peak temperature of its inline RC feedback (DESIGN.md §7).
+    Both return the same :class:`Result` surface.
 
     ``trace_override``: a pre-materialised ``JobTrace`` replacing the
     scenario's trace spec (plumbing for ``sweep`` axes that carry explicit
@@ -98,6 +108,13 @@ def run(scenario: Scenario, backend: str = "ref", *,
                              "use backend='ref'")
         tables = tables_for(scenario)
         trace = trace_override or scenario.job_trace()
+        pol = scenario.make_policy()
+        if pol.dynamic:
+            out = _jaxk.simulate_jax_dtpm(tables, scenario.scheduler,
+                                          trace.arrival_us, trace.app_index,
+                                          pol)
+            return Result.from_jax(scenario, out, scenario.design.num_pes,
+                                   float(out["peak_temp_c"]))
         out = _jaxk.simulate_jax(tables, scenario.scheduler,
                                  trace.arrival_us, trace.app_index)
         peak = _peak_temp_single(

@@ -1,23 +1,31 @@
 """``sweep(scenario, axes={...})`` — cross-product scenario batches.
 
 Any combination of scenario axes — arrival rate × scheduler × design point ×
-frequency cap × seed — is expanded into one batch.  Axes factorise into
-three kinds (see DESIGN.md §9):
+frequency cap × governor policy × seed — is expanded into one batch.  Axes
+factorise into four kinds (see DESIGN.md §9–10):
 
-* **design-affecting** (``design``, ``design.<field>``, ``governor``,
-  ``governor_params``): each combination becomes a padded ``SimTables`` lane,
-  reusing ``repro.dse.batch``'s inert-padding scheme (pad every design to the
-  widest PE count, stack leaf-wise);
+* **design-affecting** (``design``, ``design.<field>``): each combination
+  becomes a padded ``SimTables`` lane, reusing ``repro.dse.batch``'s
+  inert-padding scheme (pad every design to the widest PE count, stack
+  leaf-wise);
+* **policy** (``governor``, ``governor_params``): static governors bake into
+  the tables and behave like design axes; *dynamic* (ondemand-family)
+  governors become stacked :class:`~repro.core.dvfs.GovernorPolicy` lanes
+  vmapped through the closed-loop DTPM kernel — hundreds of policy
+  parameterisations per compiled program, peak temperature from the inline
+  RC loop;
 * **trace-affecting** (``trace``, ``trace.<field>``, aliases ``rate`` /
   ``seed`` / ``jobs``): each combination becomes a stacked workload row;
 * **static** (``scheduler``): a compile-time branch of the kernel — swept in
   an outer python loop, one compiled program per value.
 
-For one scheduler the whole (designs × traces) cross-product runs as ONE
-vmapped/jitted tensor program — schedule kernel and RC thermal scan fused —
+For one scheduler the whole (designs × policies × traces) cross-product runs
+as ONE vmapped/jitted tensor program per *policy shape* (static / dynamic) —
 and every lane is bit-for-bit equal to a per-point ``run(..., backend="jax")``
-(padding is inert; a vmap lane equals a single call).  ``backend="ref"``
-sweeps the same cross-product through the event-heap oracle lane by lane.
+(padding is inert; a vmap lane equals a single call; the sole exception is
+thermal-throttle feedback, whose batched ``expm`` may round differently).
+``backend="ref"`` sweeps the same cross-product through the event-heap
+oracle lane by lane.
 """
 from __future__ import annotations
 
@@ -29,7 +37,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from ..core.dvfs import stack_policies
 from ..core.jobgen import JobTrace
+from ..core.simkernel_jax import _simulate_dtpm
 from ..dse.batch import (_simulate_grid, pad_node_map, stack_tables,
                          stack_traces)
 from ..dse.space import DesignPoint
@@ -47,8 +57,8 @@ AXIS_ALIASES = {
 _DESIGN_FIELDS = {f.name for f in dataclasses.fields(DesignPoint)}
 _TRACE_FIELDS = {f.name for f in dataclasses.fields(TraceSpec)}
 
-# number of times the fused grid program has been traced (re-compiled);
-# the single-compile sweep contract is asserted against this counter
+# number of times a fused grid program has been traced (re-compiled);
+# the one-program-per-policy-shape sweep contract is asserted against this
 compile_count = [0]
 
 
@@ -60,7 +70,9 @@ def _axis_kind(name: str) -> str:
     name = _canon(name)
     if name == "scheduler":
         return "static"
-    if name in ("design", "governor", "governor_params"):
+    if name in ("governor", "governor_params"):
+        return "policy"
+    if name == "design":
         return "design"
     if name.startswith("design."):
         field = name.split(".", 1)[1]
@@ -76,8 +88,8 @@ def _axis_kind(name: str) -> str:
         return "trace"
     raise ValueError(
         f"unknown sweep axis {name!r}; use 'design', 'design.<field>', "
-        f"'governor', 'scheduler', 'trace', 'trace.<field>' or aliases "
-        f"{sorted(AXIS_ALIASES)}")
+        f"'governor', 'governor_params', 'scheduler', 'trace', "
+        f"'trace.<field>' or aliases {sorted(AXIS_ALIASES)}")
 
 
 def _apply_axes(scn: Scenario, names: Sequence[str],
@@ -110,6 +122,20 @@ def _sweep_grid(tables, node_of_pe, arrival, app_idx, policy, num_jobs,
                                   tables.power_idle, bins=bins,
                                   repeats=repeats)
     return out, temps
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "num_jobs"))
+def _sweep_grid_dtpm(tables, gov, arrival, app_idx, policy, num_jobs):
+    """Closed-loop DTPM lanes: (D designs, G policies, S traces) in ONE
+    program.  Peak temperature comes from the kernel's inline RC loop (the
+    one the throttle feedback integrates), so no post-hoc thermal scan."""
+    compile_count[0] += 1                  # python body runs only on trace
+    per_trace = jax.vmap(
+        lambda tb, g, a, i: _simulate_dtpm(tb, policy, num_jobs, a, i, g),
+        in_axes=(None, None, 0, 0))
+    per_policy = jax.vmap(per_trace, in_axes=(None, 0, None, None))
+    per_design = jax.vmap(per_policy, in_axes=(0, None, None, None))
+    return per_design(tables, gov, arrival, app_idx)
 
 
 def _design_lanes(base: Scenario, design_axes: List[str],
@@ -153,6 +179,7 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
     kinds = {n: _axis_kind(n) for n in names}
     static_axes = [n for n in names if kinds[n] == "static"]
     design_axes = [n for n in names if kinds[n] == "design"]
+    policy_axes = [n for n in names if kinds[n] == "policy"]
     trace_axes = [n for n in names if kinds[n] == "trace"]
     # a whole-object axis would silently overwrite per-field axes of the
     # same object (duplicated lanes, no error) — reject the combination
@@ -169,6 +196,24 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
         raise ValueError(f"unknown backend {backend!r}")
     if scenario.failures:
         raise ValueError("fail-stop injection is reference-kernel only")
+
+    # classify the governor lanes by policy shape: static governors bake
+    # into the tables (design-kind lanes), the dynamic ondemand family
+    # becomes vmapped GovernorPolicy lanes through the DTPM kernel
+    policy_combos = list(itertools.product(
+        *(values[n] for n in policy_axes))) or [()]
+    pol_scns = [_apply_axes(scenario, policy_axes, c) for c in policy_combos]
+    policies = [s.make_policy() for s in pol_scns]
+    dyn_flags = {p.dynamic for p in policies}
+    if len(dyn_flags) > 1:
+        raise ValueError(
+            "a sweep cannot mix static and dynamic (ondemand-family) "
+            "governors in one batch — they compile to different policy "
+            "shapes; split the sweep per governor kind (DESIGN.md §10)")
+    dynamic = dyn_flags.pop()
+    if not dynamic:
+        design_axes = design_axes + policy_axes   # baked into table lanes
+        policy_axes = []
 
     static_combos = list(itertools.product(
         *(values[n] for n in static_axes))) or [()]
@@ -190,12 +235,30 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
     arrival, app_idx = stack_traces(traces)
     num_jobs = int(arrival.shape[1])
 
+    # design-lane base: dynamic tables carry the OPP ladders, so the (first)
+    # dynamic governor must be applied before tables are built; every dynamic
+    # parameterisation shares the same tables (run._tables_key collapses them)
+    lane_base = pol_scns[0] if dynamic else scenario
+
     if design_batch is not None:
         if design_axes != ["design"] or tuple(
                 values["design"]) != design_batch.points:
             raise ValueError("design_batch requires a single 'design' axis "
                              "matching design_batch.points")
-        if scenario.governor != "design":
+        if dynamic:
+            if design_batch.tables.exec_opp is None:
+                raise ValueError(
+                    "design_batch tables lack the OPP ladders a dynamic "
+                    "governor needs; build them with "
+                    "build_design_batch(..., governor=<dynamic governor>)")
+        elif design_batch.tables.exec_opp is not None:
+            # dynamic-built tables bake exec_us at the ondemand initial
+            # (fmin) OPP — running the static kernel on them would silently
+            # break the per-point run() equivalence contract
+            raise ValueError(
+                "design_batch was built for a dynamic governor; a static "
+                "sweep needs build_design_batch(...) without one")
+        elif scenario.governor != "design":
             # build_design_batch bakes each point's frequency-cap governor
             # into the tables; any other governor would silently diverge
             # from the per-point run() equivalence contract
@@ -211,22 +274,31 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
     # ILP table — hoist the (D, …) stack out of the loop unless a swept
     # combo actually selects the "table" policy
     rebuild_per_combo = design_batch is None and any(
-        _apply_axes(scenario, static_axes, sc).scheduler == "table"
+        _apply_axes(lane_base, static_axes, sc).scheduler == "table"
         for sc in static_combos)
     if design_batch is None and not rebuild_per_combo:
-        tables, node_of_pe = _design_lanes(scenario, design_axes,
+        tables, node_of_pe = _design_lanes(lane_base, design_axes,
                                            design_combos, pad_pes)
+
+    gov_stack = stack_policies(policies) if dynamic else None
 
     per_static = []
     for sc in static_combos:
-        s_scn = _apply_axes(scenario, static_axes, sc)
+        s_scn = _apply_axes(lane_base, static_axes, sc)
         if rebuild_per_combo:
             tables, node_of_pe = _design_lanes(s_scn, design_axes,
                                                design_combos, pad_pes)
-        out, temps = _sweep_grid(tables, node_of_pe, arrival, app_idx,
-                                 policy=s_scn.scheduler, num_jobs=num_jobs,
-                                 bins=s_scn.thermal.bins,
-                                 repeats=s_scn.thermal.repeats)
+        if dynamic:
+            out = _sweep_grid_dtpm(tables, gov_stack, arrival, app_idx,
+                                   policy=s_scn.scheduler,
+                                   num_jobs=num_jobs)
+            temps = out["peak_temp_c"]
+        else:
+            out, temps = _sweep_grid(tables, node_of_pe, arrival, app_idx,
+                                     policy=s_scn.scheduler,
+                                     num_jobs=num_jobs,
+                                     bins=s_scn.thermal.bins,
+                                     repeats=s_scn.thermal.repeats)
         per_static.append(dict(
             avg_latency_us=np.asarray(out["avg_job_latency_us"], np.float64),
             makespan_us=np.asarray(out["makespan_us"], np.float64),
@@ -234,17 +306,20 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
             peak_temp_c=np.asarray(temps, np.float64),
             busy_per_pe_us=np.asarray(out["busy_per_pe_us"], np.float64)))
 
-    # assemble: (static..., design..., trace..., extra) then user axis order
+    # assemble: (static..., design..., policy..., trace..., extra) then the
+    # user's axes-dict order
     d_lens = [len(values[n]) for n in design_axes]
+    p_lens = [len(values[n]) for n in policy_axes]
     t_lens = [len(values[n]) for n in trace_axes]
     s_lens = [len(values[n]) for n in static_axes]
-    internal = static_axes + design_axes + trace_axes
+    internal = static_axes + design_axes + policy_axes + trace_axes
     perm = [internal.index(n) for n in names]
+    grid_ndim = 4 if dynamic else 3        # (Σstatic, D[, G], S)
 
     def _assemble(key: str) -> np.ndarray:
-        stacked = np.stack([g[key] for g in per_static])     # (Σstatic, D, S, …)
-        extra = stacked.shape[3:]
-        arr = stacked.reshape(*s_lens, *d_lens, *t_lens, *extra)
+        stacked = np.stack([g[key] for g in per_static])
+        extra = stacked.shape[grid_ndim:]
+        arr = stacked.reshape(*s_lens, *d_lens, *p_lens, *t_lens, *extra)
         k = len(internal)
         return np.transpose(arr, axes=perm + list(range(k, arr.ndim)))
 

@@ -1,0 +1,357 @@
+"""Closed-loop DTPM in the JAX kernel (DESIGN.md §7, §10).
+
+The dynamic-DVFS equivalence contract extends the static one: on comm-free
+integer-latency workloads the epoch-scan DTPM kernel reproduces the
+event-heap reference *bit for bit* under the ondemand governor — same
+schedules, same latched frequencies — because both kernels execute the same
+array-form ``GovernorPolicy`` transition (``dvfs.ondemand_index`` /
+``throttle_index``).  On top: governor-transition property tests, the
+thermal-throttle cap bound, and the one-program-per-policy-shape sweep
+contract with per-policy peak temperature from the inline RC loop.
+"""
+import numpy as np
+import pytest
+from _hypothesis_stub import given, settings, st
+
+from repro.core.applications import wifi_tx
+from repro.core.dvfs import (GovernorPolicy, MAX_OPP_LEVELS, OndemandGovernor,
+                             ThrottleGovernor, get_governor, ondemand_index,
+                             padded_ladder, stack_policies, throttle_index)
+from repro.core.jobgen import deterministic_trace, poisson_trace
+from repro.core.resources import (CPU_BIG, CPU_LITTLE, OPP_TABLE, CommModel,
+                                  make_soc_table2)
+from repro.core.schedulers import get_scheduler
+from repro.core.simkernel_jax import build_tables, simulate_jax_dtpm
+from repro.core.simkernel_ref import simulate
+from repro.dse import DesignPoint, build_design_batch, evaluate
+from repro.scenario import Scenario, TraceSpec, run, sweep, tables_for
+from repro.scenario.sweep import compile_count
+
+SCN = Scenario(apps=("wifi_tx",),
+               trace=TraceSpec(rate_jobs_per_ms=25.0, num_jobs=24, seed=3))
+
+
+def _comm_free_db():
+    db = make_soc_table2()
+    db.comm = CommModel(startup_us=0.0, bw_bytes_per_us=1e30)
+    return db
+
+
+# ------------------------------------------------ ref <-> jax equivalence
+
+@pytest.mark.parametrize("policy", ["met", "etf"])
+def test_ondemand_bitexact_on_tier1_trace(policy):
+    """Comm-free integer latencies => bit-exact DTPM schedules in float32:
+    the static exact-equality contract extended to the ondemand governor."""
+    db = _comm_free_db()
+    app = wifi_tx()
+    trace = deterministic_trace(25.0, 64, ["wifi_tx"])
+    gov = OndemandGovernor(sample_window_us=50.0)
+    ref = simulate(db, [app], trace, get_scheduler(policy), gov)
+    tables = build_tables(db, [app], governor=gov)
+    jx = simulate_jax_dtpm(tables, policy, trace.arrival_us, trace.app_index,
+                           gov.policy())
+    fin = np.asarray(jx["finish"])
+    onpe = np.asarray(jx["onpe"])
+    onopp = np.asarray(jx["onopp"])
+    opp_freq = np.asarray(tables.opp_freq)
+    pe_domain = np.asarray(tables.pe_domain)
+    assert ref.records, "empty schedule"
+    for r in ref.records:
+        assert fin[r.job_id, r.task_id] == np.float32(r.finish_us)
+        assert onpe[r.job_id, r.task_id] == r.pe_id
+        if db.pes[r.pe_id].is_cpu:
+            # the latched DVFS frequency agrees decision-for-decision
+            f = opp_freq[pe_domain[r.pe_id], onopp[r.job_id, r.task_id]]
+            assert f == np.float32(r.freq_ghz)
+
+
+@pytest.mark.parametrize("rate,seed", [(60.0, 0), (20.0, 3)])
+def test_ondemand_kernels_agree_with_comm(rate, seed):
+    db = make_soc_table2()
+    app = wifi_tx()
+    trace = poisson_trace(rate, 100, ["wifi_tx"], seed=seed)
+    gov = OndemandGovernor()
+    ref = simulate(db, [app], trace, get_scheduler("etf"), gov)
+    tables = build_tables(db, [app], governor=gov)
+    jx = simulate_jax_dtpm(tables, "etf", trace.arrival_us, trace.app_index,
+                           gov.policy())
+    np.testing.assert_allclose(float(jx["avg_job_latency_us"]),
+                               ref.avg_job_latency_us, rtol=1e-4)
+    np.testing.assert_allclose(float(jx["makespan_us"]), ref.makespan_us,
+                               rtol=1e-4)
+    np.testing.assert_allclose(float(jx["energy_j"]),
+                               ref.energy.total_energy_j, rtol=1e-3)
+
+
+def test_run_facade_ondemand_backends_agree():
+    scn = SCN.replace(governor="ondemand")
+    jx = run(scn, backend="jax")
+    ref = run(scn, backend="ref")
+    np.testing.assert_allclose(jx.avg_latency_us, ref.avg_latency_us,
+                               rtol=1e-4)
+    np.testing.assert_allclose(jx.energy_j, ref.energy_j, rtol=1e-3)
+
+
+def test_ondemand_ramps_in_jax_kernel():
+    """Under load the compiled kernel leaves fmin — the loop really closes."""
+    db = make_soc_table2()
+    app = wifi_tx()
+    trace = poisson_trace(60.0, 300, ["wifi_tx"], seed=0)
+    gov = OndemandGovernor()
+    tables = build_tables(db, [app], governor=gov)
+    jx = simulate_jax_dtpm(tables, "etf", trace.arrival_us, trace.app_index,
+                           gov.policy())
+    onopp = np.asarray(jx["onopp"])
+    big = [j for j, pe in enumerate(db.pes) if pe.pe_type == CPU_BIG]
+    mask = np.isin(np.asarray(jx["onpe"]), big) & np.asarray(jx["scheduled"])
+    assert onopp[mask].min() == 0                       # starts at fmin
+    assert onopp[mask].max() == len(OPP_TABLE[CPU_BIG]) - 1   # reaches fmax
+
+
+# ------------------------------------------------ governor-transition laws
+
+def test_ondemand_index_matches_object_governor():
+    gov = OndemandGovernor(up_threshold=0.8)
+    for pe_type in (CPU_BIG, CPU_LITTLE):
+        opps = [f for f, _ in OPP_TABLE[pe_type]]
+        for u in np.linspace(0.0, 1.2, 61):
+            f = gov.update(pe_type, opps[0], float(u))
+            assert f in opps                       # OPP-set closure
+
+
+@given(u1=st.floats(min_value=0.0, max_value=1.5),
+       u2=st.floats(min_value=0.0, max_value=1.5),
+       up=st.sampled_from([0.5, 0.8, 0.95, 1.0]),
+       pe_type=st.sampled_from([CPU_BIG, CPU_LITTLE]))
+@settings(max_examples=80, deadline=None)
+def test_property_ondemand_monotone_and_closed(u1, u2, up, pe_type):
+    """util -> freq is monotone non-decreasing, and always lands in the
+    OPP set (the two invariants the array-form transition must keep)."""
+    opps, padded, count = padded_ladder(pe_type)
+    row, n = np.asarray([padded]), np.asarray([count])
+    lo, hi = sorted([u1, u2])
+    i_lo = int(ondemand_index(row, n, up, np.asarray([lo]))[0])
+    i_hi = int(ondemand_index(row, n, up, np.asarray([hi]))[0])
+    assert i_lo <= i_hi                            # monotone in utilisation
+    for i in (i_lo, i_hi):
+        assert 0 <= i < len(opps)                  # OPP-set closure
+        assert row[0, i] in opps
+
+
+def test_throttle_index_clamps_hot_domains():
+    idx = np.asarray([4, 2, 0])
+    temps = np.asarray([80.0, 40.0, 90.0])
+    out = throttle_index(idx, temps, 60.0)
+    np.testing.assert_array_equal(out, [0, 2, 0])
+    # infinite cap disables the override
+    np.testing.assert_array_equal(throttle_index(idx, temps, np.inf), idx)
+
+
+def test_kernel_table_and_window_guards():
+    """Mismatched tables/kernel and degenerate windows fail fast instead of
+    silently computing fmin-pinned results or hanging the window loop."""
+    db = make_soc_table2()
+    app = wifi_tx()
+    trace = poisson_trace(20.0, 8, ["wifi_tx"], seed=0)
+    dyn_tables = build_tables(db, [app], governor=OndemandGovernor())
+    from repro.core.simkernel_jax import simulate_jax
+    with pytest.raises(ValueError, match="dynamic governor"):
+        simulate_jax(dyn_tables, "etf", trace.arrival_us, trace.app_index)
+    static_tables = build_tables(db, [app])
+    with pytest.raises(ValueError, match="OPP ladders"):
+        simulate_jax_dtpm(static_tables, "etf", trace.arrival_us,
+                          trace.app_index, OndemandGovernor().policy())
+    with pytest.raises(ValueError, match="positive"):
+        OndemandGovernor(sample_window_us=0.0)
+    with pytest.raises(ValueError, match="positive"):
+        simulate_jax_dtpm(dyn_tables, "etf", trace.arrival_us,
+                          trace.app_index,
+                          GovernorPolicy(dynamic=True, sample_window_us=0.0))
+    with pytest.raises(ValueError, match="positive"):
+        stack_policies([GovernorPolicy(dynamic=True, sample_window_us=-1.0)])
+    with pytest.raises(ValueError, match="up_threshold"):
+        OndemandGovernor(up_threshold=0.0)
+    with pytest.raises(ValueError, match="up_threshold"):
+        stack_policies([GovernorPolicy(dynamic=True, up_threshold=0.0)])
+    with pytest.raises(ValueError, match="dynamic"):
+        build_design_batch([DesignPoint(2, 2, 1, 1, 0)], [app],
+                           governor=get_governor("performance"))
+
+
+def test_governor_registry_and_policies():
+    assert get_governor("throttle").policy().dynamic
+    assert np.isfinite(get_governor("throttle").policy().thermal_cap_c)
+    assert not get_governor("performance").policy().dynamic
+    assert get_governor("ondemand").policy().dynamic
+    assert not np.isfinite(get_governor("ondemand").policy().thermal_cap_c)
+    with pytest.raises(ValueError, match="dynamic"):
+        stack_policies([GovernorPolicy(dynamic=False)])
+
+
+# ------------------------------------------------ thermal-throttle bound
+
+def test_throttle_cap_bounds_peak_temperature():
+    """Peak temperature under a cap never exceeds cap + one window of slack
+    (the throttle reacts one sampling window after the crossing)."""
+    scn = SCN.replace(**{"trace.rate_jobs_per_ms": 60.0,
+                         "trace.num_jobs": 300, "trace.seed": 0})
+    params = (("sample_window_us", 50.0), ("thermal_dt_s", 0.2))
+    free = run(scn.replace(governor="ondemand", governor_params=params),
+               backend="jax")
+    cap = 30.0
+    capped = run(scn.replace(
+        governor="ondemand",
+        governor_params=params + (("thermal_cap_c", cap),)), backend="jax")
+    assert free.peak_temp_c > cap          # the cap binds on this workload
+    assert capped.peak_temp_c <= cap + 3.0       # one-window overshoot slack
+    assert capped.peak_temp_c < free.peak_temp_c
+    # throttling trades latency for temperature
+    assert capped.avg_latency_us >= free.avg_latency_us
+
+
+def test_throttle_ref_kernel_agrees():
+    """The reference kernel runs the same closed loop (thin wrappers over
+    the shared policy step): results agree to float tolerance."""
+    scn = SCN.replace(**{"trace.rate_jobs_per_ms": 60.0,
+                         "trace.num_jobs": 300, "trace.seed": 0},
+                      governor="ondemand",
+                      governor_params=(("sample_window_us", 50.0),
+                                       ("thermal_dt_s", 0.2),
+                                       ("thermal_cap_c", 30.0)))
+    jx = run(scn, backend="jax")
+    ref = run(scn, backend="ref")
+    np.testing.assert_allclose(jx.avg_latency_us, ref.avg_latency_us,
+                               rtol=1e-4)
+
+
+# ------------------------------------------------ policy sweeps (§10)
+
+def test_sweep_32_policies_one_program_with_inline_peak_temp():
+    """≥32 governor_params points: ONE compiled program per policy shape,
+    per-policy peak temperature reported from the inline RC loop."""
+    params = [(("up_threshold", u), ("sample_window_us", w))
+              for u in (0.5, 0.6, 0.7, 0.8, 0.85, 0.9, 0.95, 1.0)
+              for w in (25.0, 50.0, 100.0, 200.0)]
+    assert len(params) == 32
+    scn = SCN.replace(governor="ondemand")
+    n0 = compile_count[0]
+    sr = sweep(scn, axes={"governor_params": params})
+    assert compile_count[0] - n0 <= 1       # ONE program (0 if cache-warm)
+    assert sr.shape == (32,)
+    assert sr.peak_temp_c.shape == (32,)
+    assert np.all(np.isfinite(sr.peak_temp_c))
+    assert np.all(sr.peak_temp_c >= 25.0 - 1e-6)
+    # every lane equals its single-scenario run()
+    for k in (0, 13, 31):
+        single = run(scn.replace(governor_params=params[k]), backend="jax")
+        assert sr.avg_latency_us[k] == single.avg_latency_us
+        assert sr.energy_j[k] == single.energy_j
+        np.testing.assert_allclose(sr.peak_temp_c[k], single.peak_temp_c,
+                                   rtol=1e-5)
+
+
+def test_sweep_policy_times_design_times_trace():
+    points = [DesignPoint(4, 4, 2, 4, 0), DesignPoint(1, 2, 0, 1, 0)]
+    params = [(("up_threshold", 0.6),), (("up_threshold", 0.9),)]
+    sr = sweep(SCN.replace(governor="ondemand"),
+               axes={"design": points, "governor_params": params,
+                     "seed": [0, 1]})
+    assert sr.shape == (2, 2, 2)
+    for d, p in enumerate(points):
+        single = run(SCN.replace(governor="ondemand", design=p,
+                                 governor_params=params[1]).with_seed(1),
+                     backend="jax")
+        assert sr.avg_latency_us[d, 1, 1] == single.avg_latency_us
+
+
+def test_sweep_mixed_governor_kinds_rejected():
+    with pytest.raises(ValueError, match="policy[ \n]+shapes|policy shapes"):
+        sweep(SCN, axes={"governor": ["performance", "ondemand"]})
+
+
+def test_sweep_ref_backend_governor_params():
+    params = [(("up_threshold", 0.6),), (("up_threshold", 0.9),)]
+    sr = sweep(SCN.replace(governor="ondemand"),
+               axes={"governor_params": params}, backend="ref")
+    single = run(SCN.replace(governor="ondemand",
+                             governor_params=params[1]), backend="ref")
+    assert sr.avg_latency_us[1] == single.avg_latency_us
+
+
+# ------------------------------------------------ DSE over dynamic policies
+
+def test_design_batch_gains_opp_dimension():
+    points = [DesignPoint(4, 4, 2, 4, 0),
+              DesignPoint(2, 2, 1, 2, 0, big_freq_ghz=1.4)]
+    apps = [wifi_tx()]
+    static = build_design_batch(points, apps)
+    assert not static.dynamic and static.tables.exec_opp is None
+    dyn = build_design_batch(points, apps, governor=OndemandGovernor())
+    assert dyn.dynamic
+    D, A, T, P, K = dyn.tables.exec_opp.shape     # leading design axis
+    assert (D, K) == (2, MAX_OPP_LEVELS)
+    # the second design's big-cluster ladder is truncated at its 1.4 GHz cap
+    num_opp = np.asarray(dyn.tables.num_opp)
+    big_levels = [f for f, _ in OPP_TABLE[CPU_BIG]]
+    assert num_opp[0, 0] == len(big_levels)
+    assert num_opp[1, 0] == sum(f <= 1.4 + 1e-9 for f in big_levels)
+
+
+def test_dynamic_governor_respects_design_freq_caps():
+    """A design's frequency caps bound the ondemand ladder on every entry
+    point — run(), sweep lanes and dse.evaluate agree on the capped set."""
+    point = DesignPoint(4, 4, 2, 4, 0, big_freq_ghz=1.0)
+    scn = SCN.replace(design=point, governor="ondemand",
+                      **{"trace.rate_jobs_per_ms": 60.0,
+                         "trace.num_jobs": 120})
+    res = run(scn, backend="jax")
+    tables = tables_for(scn)
+    big_levels = [f for f, _ in OPP_TABLE[CPU_BIG]]
+    capped = sum(f <= 1.0 + 1e-9 for f in big_levels)
+    assert int(np.asarray(tables.num_opp)[0]) == capped
+    # the latched OPP never exceeds the cap on big-cluster tasks
+    onopp = np.asarray(res.raw["onopp"])
+    onpe = np.asarray(res.raw["onpe"])
+    big = [j for j, pe in enumerate(scn.soc().pes) if pe.pe_type == CPU_BIG]
+    mask = np.isin(onpe, big) & np.asarray(res.raw["scheduled"])
+    assert onopp[mask].max() <= capped - 1
+    # the reference kernel ranges over the same capped ladder
+    ref = run(scn, backend="ref")
+    assert max(r.freq_ghz for r in ref.raw.records
+               if scn.soc().pes[r.pe_id].pe_type == CPU_BIG) <= 1.0 + 1e-9
+    np.testing.assert_allclose(res.avg_latency_us, ref.avg_latency_us,
+                               rtol=1e-4)
+    # dse.evaluate's capped batch matches the facade numbers
+    ev = evaluate([point], [wifi_tx()], [scn.job_trace()],
+                  governor="ondemand")
+    assert ev.latency_per_trace[0, 0] == res.avg_latency_us
+
+
+def test_sweep_rejects_mismatched_design_batch_kind():
+    points = [DesignPoint(2, 2, 1, 1, 0)]
+    apps = [wifi_tx()]
+    dyn_batch = build_design_batch(points, apps, governor=OndemandGovernor())
+    # static sweep over dynamic-built tables (exec_us baked at fmin) — reject
+    with pytest.raises(ValueError, match="dynamic governor"):
+        sweep(SCN.replace(governor="design"),
+              axes={"design": points, "seed": [0]}, design_batch=dyn_batch)
+    # dynamic sweep over static-built tables (no OPP ladders) — reject
+    static_batch = build_design_batch(points, apps)
+    with pytest.raises(ValueError, match="OPP ladders"):
+        sweep(SCN.replace(governor="ondemand"),
+              axes={"design": points, "seed": [0]},
+              design_batch=static_batch)
+
+
+def test_dse_evaluate_ranks_dynamic_policies():
+    points = [DesignPoint(4, 4, 2, 4, 0), DesignPoint(1, 2, 0, 1, 0)]
+    apps = [wifi_tx()]
+    traces = [poisson_trace(20.0, 16, ["wifi_tx"], seed=s) for s in (0, 1)]
+    ev = evaluate(points, apps, traces, governor="ondemand",
+                  governor_params=(("thermal_dt_s", 0.05),))
+    assert ev.avg_latency_us.shape == (2,)
+    assert np.all(np.isfinite(ev.objectives()))
+    assert np.all(ev.peak_temp_c >= 25.0 - 1e-6)
+    with pytest.raises(ValueError, match="design"):
+        evaluate(points, apps, traces, governor="performance")

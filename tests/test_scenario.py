@@ -3,7 +3,8 @@
 Covers the backend-equivalence contract (run() is a bit-for-bit delegate to
 the legacy entry points), the sweep contract (cross-product axes == per-point
 run(), ONE compiled program per scheduler), the deprecation shims, and the
-one-release *_mj → *_j energy aliases.
+removal of the expired *_mj → *_j energy aliases.  Closed-loop DTPM (dynamic
+governors on the jax backend) is covered in tests/test_dtpm.py.
 """
 import dataclasses
 
@@ -107,10 +108,11 @@ def test_result_metrics_surface():
 def test_run_jax_rejects_ref_only_features():
     with pytest.raises(ValueError, match="reference"):
         run(SCN.replace(failures=((0, 100.0),)), backend="jax")
-    with pytest.raises(ValueError, match="static governors"):
-        run(SCN.replace(governor="ondemand"), backend="jax")
     with pytest.raises(ValueError, match="backend"):
         run(SCN, backend="gem5")
+    # ondemand is no longer ref-only: the DTPM kernel runs it (DESIGN.md §7)
+    res = run(SCN.replace(governor="ondemand"), backend="jax")
+    assert res.makespan_us > 0 and res.peak_temp_c >= 25.0 - 1e-6
 
 
 def test_run_ref_supports_failures_and_ondemand():
@@ -242,7 +244,7 @@ def test_core_simulate_jax_shim_warns_matches_and_aliases():
     with pytest.warns(DeprecationWarning, match="repro.scenario"):
         out = core.simulate_jax(tables, "etf", trace.arrival_us,
                                 trace.app_index)
-    assert out["energy_mj"] is out["energy_j"]
+    assert "energy_mj" not in out          # one-release alias key removed
     res = run(SCN, backend="jax")
     np.testing.assert_array_equal(np.asarray(out["avg_job_latency_us"]),
                                   res.avg_latency_us)
@@ -254,24 +256,23 @@ def test_dse_simulate_design_batch_shim_warns_and_matches():
     arrival, app_idx = stack_traces([MIX.job_trace()])
     with pytest.warns(DeprecationWarning, match="repro.scenario"):
         out = dse.simulate_design_batch(batch, "etf", arrival, app_idx)
-    assert out["energy_mj"] is out["energy_j"]
+    assert "energy_mj" not in out          # one-release alias key removed
     sr = sweep(MIX.replace(governor="design"),
                axes={"design": points, "seed": [MIX.trace.seed]})
     assert np.asarray(out["avg_job_latency_us"])[0, 0] \
         == sr.avg_latency_us[0, 0]
 
 
-def test_energy_mj_aliases_warn_and_equal():
+def test_energy_mj_aliases_removed():
+    """The one-release *_mj deprecation window is over: aliases are gone."""
     report = run(SCN, backend="ref").energy_report
-    with pytest.warns(DeprecationWarning, match="_j"):
-        assert report.total_energy_mj == report.total_energy_j
-    with pytest.warns(DeprecationWarning, match="_j"):
-        np.testing.assert_array_equal(report.energy_per_pe_mj,
-                                      report.energy_per_pe_j)
+    assert not hasattr(report, "total_energy_mj")
+    assert not hasattr(report, "energy_per_pe_mj")
+    assert report.total_energy_j > 0
     ev = dse.evaluate([DesignPoint(2, 2, 1, 1, 0)], MIX.applications(),
                       [MIX.job_trace()])
-    with pytest.warns(DeprecationWarning, match="_j"):
-        np.testing.assert_array_equal(ev.energy_mj, ev.energy_j)
+    assert not hasattr(ev, "energy_mj")
+    assert np.all(ev.energy_j > 0)
 
 
 # ----------------------------------------------------- facade delegation
