@@ -2,9 +2,8 @@
 vs a per-design ``run()`` loop — the scale story the dse subsystem exists
 for.  Both sides are declared through one ``Scenario``; both include the
 fused RC thermal co-simulation."""
-import time
-
 from repro.dse import DesignSpace, build_design_batch, evaluate
+from repro.obs import bench_cli, timer
 from repro.scenario import Scenario, TraceSpec, run as run_scenario, sweep
 
 NUM_DESIGNS = 64
@@ -28,12 +27,13 @@ def run():
     batch = build_design_batch(points, BASE.applications())
 
     # batched sweep: cold (compile) and warm
-    t0 = time.perf_counter()
-    sweep(BASE, axes=axes, design_batch=batch)
-    cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    sweep(BASE, axes=axes, design_batch=batch)
-    warm = time.perf_counter() - t0
+    t = timer("bench.dse.batched")
+    with t:
+        sweep(BASE, axes=axes, design_batch=batch)
+    cold = t.last_s
+    with t:
+        sweep(BASE, axes=axes, design_batch=batch)
+    warm = t.last_s
     rows.append(("dse/batched/cold", cold * 1e6 / NUM_DESIGNS,
                  "us_per_design_incl_compile"))
     rows.append(("dse/batched/warm", warm * 1e6 / NUM_DESIGNS,
@@ -52,12 +52,13 @@ def run():
                 run_scenario(BASE.replace(design=p).with_seed(s),
                              backend="jax")
 
-    t0 = time.perf_counter()
-    loop_once()                                      # compiles per design
-    loop_cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    loop_once()
-    loop_warm = time.perf_counter() - t0
+    t_loop = timer("bench.dse.loop")
+    with t_loop:
+        loop_once()                                  # compiles per design
+    loop_cold = t_loop.last_s
+    with t_loop:
+        loop_once()
+    loop_warm = t_loop.last_s
     rows.append(("dse/loop/cold", loop_cold * 1e6 / len(subset),
                  "us_per_design_incl_compile"))
     rows.append(("dse/loop/warm", loop_warm * 1e6 / len(subset),
@@ -73,3 +74,11 @@ def run():
     rows.append(("dse/front_size", float(res.front_mask().sum()),
                  "non_dominated_designs"))
     return rows
+
+
+def main(argv=None) -> int:
+    return bench_cli(run, "dse", __doc__, argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

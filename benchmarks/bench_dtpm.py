@@ -8,12 +8,11 @@ backend reports the schedule's steady-state read-out, the DTPM kernel the
 inline RC loop its throttle feedback integrates (DESIGN.md §7).
 
 ``python -m benchmarks.bench_dtpm [--json PATH]`` runs this module alone and
-optionally dumps the rows as JSON (the CI perf artifact).
+optionally dumps the rows + run manifest as JSON (the CI perf artifact).
 """
 from __future__ import annotations
 
-import time
-
+from repro.obs import bench_cli, timer
 from repro.scenario import Scenario, TraceSpec, run as run_scenario
 
 SCN = Scenario(apps=("wifi_tx",),
@@ -36,15 +35,15 @@ CASES = [
 
 def run():
     rows = []
+    t = timer("bench.dtpm.warm")
     for label, gov, params, backend in CASES:
         scn = SCN.replace(governor=gov, governor_params=params)
         res = run_scenario(scn, backend=backend)
         if backend == "jax":
             # warm wall-clock of the compiled DTPM kernel (compile excluded)
-            t0 = time.perf_counter()
-            res = run_scenario(scn, backend=backend)
-            rows.append((f"dtpm/{label}/wall", (time.perf_counter() - t0)
-                         * 1e6, "us_warm"))
+            with t:
+                res = run_scenario(scn, backend=backend)
+            rows.append((f"dtpm/{label}/wall", t.last_us, "us_warm"))
         rows.append((f"dtpm/{label}/latency", res.avg_latency_us,
                      "avg_job_latency_us"))
         rows.append((f"dtpm/{label}/energy", res.energy_j, "total_j"))
@@ -53,23 +52,9 @@ def run():
     return rows
 
 
-def main(argv=None) -> None:
-    import argparse
-    import json
-
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", metavar="PATH",
-                    help="also dump rows as JSON (CI perf artifact)")
-    args = ap.parse_args(argv)
-    rows = run()
-    print("name,value,derived")
-    for name, val, derived in rows:
-        print(f"{name},{val:.4f},{derived}")
-    if args.json:
-        with open(args.json, "w") as fh:
-            json.dump([dict(name=n, value=v, derived=d)
-                       for n, v, d in rows], fh, indent=2)
+def main(argv=None) -> int:
+    return bench_cli(run, "dtpm", __doc__, argv)
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -4,8 +4,7 @@ MET / ETF / ILP-table schedulers on the Table-2 SoC (WiFi-TX workload).
 All work is declared through one ``Scenario``; the rate × seed grid per
 scheduler is a single ``sweep(..., backend="ref")``.
 """
-import time
-
+from repro.obs import bench_cli, timer
 from repro.scenario import Scenario, TraceSpec, sweep
 
 RATES = [1, 5, 10, 20, 30, 40, 50, 60, 70, 80]
@@ -18,11 +17,12 @@ BASE = Scenario(apps=("wifi_tx",), trace=TraceSpec(num_jobs=NUM_JOBS))
 def run():
     rows = []
     curves = {}
+    t = timer("bench.fig3.sweep")
     for name, policy in [("met", "met"), ("etf", "etf"), ("ilp", "table")]:
         scn = BASE.replace(scheduler=policy)
-        t0 = time.perf_counter()
-        sr = sweep(scn, axes={"rate": RATES, "seed": SEEDS}, backend="ref")
-        dt = (time.perf_counter() - t0) * 1e6 / (len(RATES) * len(SEEDS))
+        with t:
+            sr = sweep(scn, axes={"rate": RATES, "seed": SEEDS}, backend="ref")
+        dt = t.last_us / (len(RATES) * len(SEEDS))
         ys = [float(v) for v in sr.avg_latency_us.mean(axis=1)]
         curves[name] = ys
         for rate, y in zip(RATES, ys):
@@ -38,3 +38,11 @@ def run():
                  float(curves["etf"][hi] < curves["ilp"][hi] < curves["met"][hi]),
                  "etf<ilp<met"))
     return rows
+
+
+def main(argv=None) -> int:
+    return bench_cli(run, "fig3", __doc__, argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,6 +5,7 @@ Requires ``experiments/dryrun/*.json`` (run ``python -m repro.launch.dryrun
 """
 from repro.configs import ARCHITECTURES, SHAPES
 from repro.launch.roofline import cell_terms, load_cell
+from repro.obs import bench_cli
 
 
 def run():
@@ -32,3 +33,11 @@ def run():
                          f";useful={t['model_flops_frac']:.2f}"))
     rows.append(("roofline/missing_cells", float(missing), "run_dryrun_first"))
     return rows
+
+
+def main(argv=None) -> int:
+    return bench_cli(run, "roofline", __doc__, argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

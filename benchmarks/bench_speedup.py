@@ -2,10 +2,9 @@
 for accelerators: the event-heap reference kernel one scenario at a time vs
 the whole workload grid as ONE vmapped/jitted ``sweep`` (which also fuses
 the RC thermal co-simulation)."""
-import time
-
 import numpy as np
 
+from repro.obs import bench_cli, timer
 from repro.scenario import Scenario, TraceSpec, run as run_scenario, sweep
 
 NUM_JOBS = 80
@@ -21,22 +20,22 @@ def run():
     traces = [ts.materialize(BASE.app_names()) for ts in SPECS]
 
     # reference event-heap kernel, one scenario at a time
-    t0 = time.perf_counter()
-    ref_lat = [run_scenario(BASE.replace(trace=ts), backend="ref",
-                            trace_override=tr).avg_latency_us
-               for ts, tr in zip(SPECS, traces)]
-    t_ref = time.perf_counter() - t0
+    t_ref = timer("bench.speedup.ref")
+    with t_ref:
+        ref_lat = [run_scenario(BASE.replace(trace=ts), backend="ref",
+                                trace_override=tr).avg_latency_us
+                   for ts, tr in zip(SPECS, traces)]
 
     # vectorised kernel: the full trace axis in one batched tensor program
     sr = sweep(BASE, axes={"trace": traces})         # includes jit compile
-    t0 = time.perf_counter()
-    sr = sweep(BASE, axes={"trace": traces})
-    t_jax = time.perf_counter() - t0
+    t_jax = timer("bench.speedup.jax_warm")
+    with t_jax:
+        sr = sweep(BASE, axes={"trace": traces})
 
     agree = np.allclose(sr.avg_latency_us, np.asarray(ref_lat), rtol=1e-3)
     num_tasks = BASE.applications()[0].num_tasks
-    per_sim_ref = t_ref / BATCH * 1e6
-    per_sim_jax = t_jax / BATCH * 1e6
+    per_sim_ref = t_ref.last_s / BATCH * 1e6
+    per_sim_jax = t_jax.last_s / BATCH * 1e6
     return [
         ("speedup/ref_kernel", per_sim_ref, "us_per_simulation"),
         ("speedup/jax_kernel_batched", per_sim_jax,
@@ -44,5 +43,13 @@ def run():
         ("speedup/jax_over_ref", per_sim_ref / per_sim_jax,
          f"x_speedup(batch={BATCH},agree={agree})"),
         ("speedup/events_per_sec",
-         BATCH * NUM_JOBS * num_tasks / t_jax, "scheduled_tasks_per_s"),
+         BATCH * NUM_JOBS * num_tasks / t_jax.last_s, "scheduled_tasks_per_s"),
     ]
+
+
+def main(argv=None) -> int:
+    return bench_cli(run, "speedup", __doc__, argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,7 +1,6 @@
 """Paper Table 1: WiFi-TX execution profiles on A7/A15/accelerators."""
-import time
-
 from repro.core.resources import ACC_FFT, ACC_SCRAMBLER, CPU_BIG, CPU_LITTLE
+from repro.obs import bench_cli, timer
 from repro.scenario import Scenario
 
 
@@ -10,13 +9,21 @@ def run():
     db = scn.soc()
     (app,) = scn.applications()
     rows = []
-    t0 = time.perf_counter()
-    for task in app.tasks:
-        prof = db.profiles[task.name]
-        rows.append((f"table1/{task.name}",
-                     prof.get(CPU_LITTLE, float("nan")),
-                     f"A15={prof.get(CPU_BIG)}us"
-                     f" ACC={prof.get(ACC_SCRAMBLER, prof.get(ACC_FFT, '-'))}"))
-    dt = (time.perf_counter() - t0) * 1e6
-    rows.append(("table1/lookup_total", dt, f"{len(app.tasks)}tasks"))
+    t = timer("bench.table1.lookup")
+    with t:
+        for task in app.tasks:
+            prof = db.profiles[task.name]
+            rows.append((f"table1/{task.name}",
+                         prof.get(CPU_LITTLE, float("nan")),
+                         f"A15={prof.get(CPU_BIG)}us"
+                         f" ACC={prof.get(ACC_SCRAMBLER, prof.get(ACC_FFT, '-'))}"))
+    rows.append(("table1/lookup_total", t.last_us, f"{len(app.tasks)}tasks"))
     return rows
+
+
+def main(argv=None) -> int:
+    return bench_cli(run, "table1", __doc__, argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

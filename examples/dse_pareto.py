@@ -41,10 +41,10 @@ def main():
           f"(incl. jit compile)\n")
 
     # -- padded-sweep vs per-point run() spot check (bit-for-bit) ----------
-    n0 = compile_count[0]
+    n0 = compile_count.value
     sr = sweep(BASE, axes={"design": points, "seed": seeds})
     print(f"sweep over design x seed: shape {sr.shape}, "
-          f"{compile_count[0] - n0} compiled program(s)")
+          f"{compile_count.value - n0} compiled program(s)")
     rng = np.random.default_rng(1)
     for d in rng.choice(NUM_DESIGNS, size=3, replace=False):
         p = points[d]

@@ -38,8 +38,16 @@ from .dvfs import (Governor, GovernorPolicy, MAX_OPP_LEVELS,
 from .power import active_power, idle_power
 from .resources import NOMINAL_FREQ, ResourceDB
 from . import thermal as _thermal
+from ..obs.metrics import counter as _obs_counter
 
 BIG = jnp.float32(1e30)
+
+# jit-trace counters (the python bodies below run only on compile): the run
+# manifest reports them, tests assert the telemetry path never re-traces the
+# simulation programs (DESIGN.md §11)
+_COMPILES_STATIC = _obs_counter("kernel.jax.simulate.compile_count")
+_COMPILES_DTPM = _obs_counter("kernel.jax.simulate_dtpm.compile_count")
+_COMPILES_TELEMETRY = _obs_counter("obs.telemetry.scan.compile_count")
 
 # Frequency domains: one per SoC cluster; make_soc uses 0=big, 1=LITTLE,
 # 2=accelerator fabric.  Padded PE slots map to the last (accel) domain,
@@ -257,6 +265,56 @@ def _build_opp_tables(db: ResourceDB, apps: Sequence[Application],
 
 
 # --------------------------------------------------------------------------
+# The per-window DTPM transition — one function, two drivers
+# --------------------------------------------------------------------------
+
+def _window_step(tables: SimTables, valid_j, window, up, cap, A_rc, B_rc,
+                 st, carry):
+    """One sampling window: utilisation → governor step, window power →
+    exact RC step, temperature → throttle clamp (ref kernel order).
+
+    ``carry`` is ``(opp_idx, next_w, temps, peak)``.  Returns the advanced
+    carry plus the window's observables ``(util, node_power_w)`` — the DTPM
+    epoch scan drives this lazily per decision epoch (dropping the aux), the
+    telemetry scan stacks carry + aux per window via ``lax.scan`` ys
+    (DESIGN.md §11).  Because commits never start before an already-closed
+    window (``start ≥ data_ready ≥ epoch ≥ window end``), replaying the
+    windows against the *final* schedule state yields exactly the in-loop
+    values — tests pin the replayed peak to the kernel's ``peak_temp_c``.
+    """
+    opp_idx, next_w, temps, peak = carry
+    w1, w0 = next_w, next_w - window
+    committed = st["scheduled"] & valid_j                      # (J, T)
+    ov = jnp.clip(jnp.minimum(st["finish"], w1)
+                  - jnp.maximum(st["start"], w0), 0.0, window)
+    ov = jnp.where(committed, ov, 0.0)                         # (J, T)
+    dom_oh = jax.nn.one_hot(tables.pe_domain[st["onpe"]],
+                            tables.opp_freq.shape[0],
+                            dtype=jnp.float32)                 # (J, T, C)
+    cpu_w = tables.pe_is_cpu[st["onpe"]]                       # (J, T)
+    busy_dom = jnp.einsum("jt,jtc->c", ov * cpu_w, dom_oh)
+    util = busy_dom / jnp.maximum(window * tables.domain_cpu, 1e-9)
+    proposed = ondemand_index(tables.opp_freq, tables.num_opp, up, util,
+                              xp=jnp)
+    # realised per-node window power: active at the latched OPP + idle
+    P = tables.num_pes
+    pe_oh = jax.nn.one_hot(st["onpe"], P, dtype=jnp.float32)   # (J, T, P)
+    p_task = tables.power_active_opp[st["onpe"], st["onopp"]]  # (J, T)
+    e_act = jnp.einsum("jt,jtp->p", ov * p_task, pe_oh)        # (P,) W·us
+    busy_pe = jnp.einsum("jt,jtp->p", ov, pe_oh)
+    idle_frac = 1.0 - jnp.clip(busy_pe / window, 0.0, 1.0)
+    p_pe = e_act / window + tables.power_idle * idle_frac      # (P,) W
+    node_oh = jax.nn.one_hot(tables.node_of_pe, _thermal.NUM_NODES,
+                             dtype=jnp.float32)                # (P, 3)
+    node_p = p_pe @ node_oh                                    # (3,) W
+    temps = _thermal.exact_step_jax(temps, node_p, A_rc, B_rc)
+    peak = jnp.maximum(peak, jnp.max(temps[:3]))
+    opp_idx = throttle_index(proposed, temps[tables.domain_node], cap,
+                             xp=jnp)
+    return (opp_idx, next_w + window, temps, peak), (util, node_p)
+
+
+# --------------------------------------------------------------------------
 # The simulation kernel — one epoch-scan, static DVFS as the degenerate case
 # --------------------------------------------------------------------------
 
@@ -306,36 +364,10 @@ def _epoch_scan(tables: SimTables, policy: str, num_jobs: int,
                   + jnp.arange(T, dtype=jnp.int32)[None, :])      # (J, T)
 
     def advance_window(st, carry):
-        """One sampling window: utilisation → governor step, window power →
-        exact RC step, temperature → throttle clamp (ref kernel order)."""
-        opp_idx, next_w, temps, peak = carry
-        w1, w0 = next_w, next_w - window
-        committed = st["scheduled"] & valid_j                      # (J, T)
-        ov = jnp.clip(jnp.minimum(st["finish"], w1)
-                      - jnp.maximum(st["start"], w0), 0.0, window)
-        ov = jnp.where(committed, ov, 0.0)                         # (J, T)
-        dom_oh = jax.nn.one_hot(tables.pe_domain[st["onpe"]],
-                                tables.opp_freq.shape[0],
-                                dtype=jnp.float32)                 # (J, T, C)
-        cpu_w = tables.pe_is_cpu[st["onpe"]]                       # (J, T)
-        busy_dom = jnp.einsum("jt,jtc->c", ov * cpu_w, dom_oh)
-        util = busy_dom / jnp.maximum(window * tables.domain_cpu, 1e-9)
-        proposed = ondemand_index(tables.opp_freq, tables.num_opp, up, util,
-                                  xp=jnp)
-        # realised per-node window power: active at the latched OPP + idle
-        pe_oh = jax.nn.one_hot(st["onpe"], P, dtype=jnp.float32)   # (J, T, P)
-        p_task = tables.power_active_opp[st["onpe"], st["onopp"]]  # (J, T)
-        e_act = jnp.einsum("jt,jtp->p", ov * p_task, pe_oh)        # (P,) W·us
-        busy_pe = jnp.einsum("jt,jtp->p", ov, pe_oh)
-        idle_frac = 1.0 - jnp.clip(busy_pe / window, 0.0, 1.0)
-        p_pe = e_act / window + tables.power_idle * idle_frac      # (P,) W
-        node_oh = jax.nn.one_hot(tables.node_of_pe, _thermal.NUM_NODES,
-                                 dtype=jnp.float32)                # (P, 3)
-        temps = _thermal.exact_step_jax(temps, p_pe @ node_oh, A_rc, B_rc)
-        peak = jnp.maximum(peak, jnp.max(temps[:3]))
-        opp_idx = throttle_index(proposed, temps[tables.domain_node], cap,
-                                 xp=jnp)
-        return opp_idx, next_w + window, temps, peak
+        """Advance one sampling window; the telemetry aux is dropped here
+        (dead code the compiler eliminates — the program is unchanged)."""
+        return _window_step(tables, valid_j, window, up, cap, A_rc, B_rc,
+                            st, carry)[0]
 
     def body(st, _):
         scheduled, finish = st["scheduled"], st["finish"]
@@ -461,6 +493,7 @@ def _simulate(tables: SimTables, policy: str, num_jobs: int,
         # OPP — the static kernel would return plausible but wrong numbers
         raise ValueError("tables were built for a dynamic governor; run "
                          "them through simulate_jax_dtpm (DESIGN.md §7)")
+    _COMPILES_STATIC.inc()                 # python body runs only on trace
     return _epoch_scan(tables, policy, num_jobs, arrival, app_idx, None)
 
 
@@ -471,6 +504,7 @@ def _simulate_dtpm(tables: SimTables, policy: str, num_jobs: int,
     if tables.exec_opp is None:
         raise ValueError("tables lack OPP ladders; build them with the "
                          "dynamic governor (build_tables(governor=...))")
+    _COMPILES_DTPM.inc()                   # python body runs only on trace
     return _epoch_scan(tables, policy, num_jobs, arrival, app_idx, gov)
 
 
@@ -510,3 +544,90 @@ def simulate_batch(tables: SimTables, policy: str, arrival: np.ndarray,
     point per row (seed × rate × mix).  Runs as ONE vmapped tensor program."""
     fn = jax.vmap(lambda a, i: _simulate(tables, policy, int(arrival.shape[1]), a, i))
     return fn(jnp.asarray(arrival, jnp.float32), jnp.asarray(app_idx, jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Telemetry scans — per-window (W, C) timelines from a realised schedule
+# --------------------------------------------------------------------------
+#
+# Both scans replay the kernel's window machinery against the *final* epoch
+# scan state.  For the DTPM kernel this is value-identical to the in-loop
+# carry (see _window_step's docstring: no commit can overlap a closed
+# window), so telemetry costs one extra small program and the simulation
+# program itself — the telemetry=False path — stays byte-identical.
+
+@functools.partial(jax.jit, static_argnames=("num_windows",))
+def _telemetry_scan_dtpm(tables: SimTables, gov: GovernorPolicy,
+                         app_idx, scheduled, start, finish, onpe, onopp,
+                         num_windows: int):
+    """(W, …) ys of the DTPM window carry: OPP index, utilisation, node
+    power and RC temperatures per sampling window."""
+    _COMPILES_TELEMETRY.inc()              # python body runs only on trace
+    valid_j = tables.valid[app_idx]
+    C = tables.opp_freq.shape[0]
+    window = jnp.asarray(gov.sample_window_us, jnp.float32)
+    up = jnp.asarray(gov.up_threshold, jnp.float32)
+    cap = jnp.asarray(gov.thermal_cap_c, jnp.float32)
+    A_rc, B_rc = _thermal.exact_step_matrices_jax(gov.thermal_dt_s)
+    st = dict(scheduled=scheduled, start=start, finish=finish,
+              onpe=onpe, onopp=onopp)
+    step = functools.partial(_window_step, tables, valid_j, window, up, cap,
+                             A_rc, B_rc, st)
+    carry0 = (jnp.zeros((C,), jnp.int32), window,
+              jnp.full((4,), _thermal.T_AMBIENT_C, jnp.float32),
+              jnp.float32(_thermal.T_AMBIENT_C))
+
+    def body(carry, _):
+        new, (util, node_p) = step(carry)
+        return new, dict(opp_idx=new[0], util=util, power_w=node_p,
+                         temps_c=new[2])
+
+    _, ys = jax.lax.scan(body, carry0, None, length=num_windows)
+    return ys
+
+
+@functools.partial(jax.jit, static_argnames=("num_windows", "num_domains"))
+def _telemetry_scan_static(tables: SimTables, app_idx, scheduled, start,
+                           finish, onpe, window_us, num_windows: int,
+                           num_domains: int):
+    """Static-governor telemetry: same window observables at the tables'
+    fixed OPP (frequency columns are filled by the caller — they are
+    constants of the governor, not of the schedule).  The RC network
+    integrates in real time (dt = window)."""
+    _COMPILES_TELEMETRY.inc()              # python body runs only on trace
+    valid_j = tables.valid[app_idx]
+    P = tables.num_pes
+    C = num_domains
+    window = jnp.asarray(window_us, jnp.float32)
+    A_rc, B_rc = _thermal.exact_step_matrices_jax(window * 1e-6)
+    committed = scheduled & valid_j
+    dom_oh = jax.nn.one_hot(tables.pe_domain[onpe], C, dtype=jnp.float32)
+    cpu_w = tables.pe_is_cpu[onpe]
+    pe_oh = jax.nn.one_hot(onpe, P, dtype=jnp.float32)
+    node_oh = jax.nn.one_hot(tables.node_of_pe, _thermal.NUM_NODES,
+                             dtype=jnp.float32)
+    domain_cpu = jnp.zeros((C,), jnp.float32).at[tables.pe_domain].add(
+        tables.pe_is_cpu)
+    p_task = tables.power_active[onpe]                         # (J, T)
+
+    def body(carry, w):
+        temps = carry
+        w0 = w.astype(jnp.float32) * window
+        w1 = w0 + window
+        ov = jnp.clip(jnp.minimum(finish, w1) - jnp.maximum(start, w0),
+                      0.0, window)
+        ov = jnp.where(committed, ov, 0.0)
+        busy_dom = jnp.einsum("jt,jtc->c", ov * cpu_w, dom_oh)
+        util = busy_dom / jnp.maximum(window * domain_cpu, 1e-9)
+        e_act = jnp.einsum("jt,jtp->p", ov * p_task, pe_oh)
+        busy_pe = jnp.einsum("jt,jtp->p", ov, pe_oh)
+        idle_frac = 1.0 - jnp.clip(busy_pe / window, 0.0, 1.0)
+        p_pe = e_act / window + tables.power_idle * idle_frac
+        node_p = p_pe @ node_oh
+        temps = _thermal.exact_step_jax(temps, node_p, A_rc, B_rc)
+        return temps, dict(util=util, power_w=node_p, temps_c=temps)
+
+    _, ys = jax.lax.scan(body, jnp.full((4,), _thermal.T_AMBIENT_C,
+                                        jnp.float32),
+                         jnp.arange(num_windows))
+    return ys

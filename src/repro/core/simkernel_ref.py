@@ -73,7 +73,8 @@ class SimResult:
 
 def simulate(db: ResourceDB, apps: Sequence[Application], trace: JobTrace,
              scheduler: Scheduler, governor: Optional[Governor] = None,
-             failures: Optional[Sequence[Tuple[int, float]]] = None) -> SimResult:
+             failures: Optional[Sequence[Tuple[int, float]]] = None,
+             telemetry=None) -> SimResult:
     """Run one simulation; returns the full schedule + aggregate stats.
 
     ``failures``: optional fail-stop events [(pe_id, fail_time_us), ...] —
@@ -82,6 +83,16 @@ def simulate(db: ResourceDB, apps: Sequence[Application], trace: JobTrace,
     re-scheduled on the surviving PEs.  Models node loss the same way the
     pod-scale half handles preemption (checkpoint/restart): the work is
     lost, the workload still completes.
+
+    ``telemetry``: optional per-window recorder (duck-typed:
+    ``repro.obs.telemetry.TelemetryRecorder``).  Under a dynamic governor
+    every sampling window's utilisation, post-transition frequency, realised
+    node power and RC temperatures are recorded in-loop — the exact values
+    the governor feedback integrated — and the windows are drained past the
+    last decision epoch to the makespan (matching the JAX kernel's tail
+    drain).  Recording is observation-only: it adds a thermal read-out for
+    uncapped governors but never feeds back into scheduling, so results are
+    unchanged (asserted in tests/test_obs.py).
     """
     governor = governor or PerformanceGovernor()
     scheduler.reset()
@@ -114,12 +125,15 @@ def simulate(db: ResourceDB, apps: Sequence[Application], trace: JobTrace,
     committed: List[TaskRecord] = []
 
     throttle = pol.dynamic and np.isfinite(pol.thermal_cap_c)
+    recording = telemetry is not None and pol.dynamic and window_us
     caps = getattr(governor, "freq_caps", None)
     # loop invariants of the per-window scans, hoisted: CPU PEs per cluster,
-    # capped OPP ladders, thermal node maps
+    # capped OPP ladders, thermal node maps.  Recording needs the thermal
+    # read-out (and the ladders, for frequency indices) even when no cap is
+    # set — the DTPM carry in the JAX kernel always integrates it.
     cl_pes = {c: [pe.pe_id for pe in db.pes
                   if pe.cluster == c and pe.is_cpu] for c in clusters}
-    if throttle:
+    if throttle or recording:
         rc_ab = _thermal.exact_step_matrices(pol.thermal_dt_s)
         temps = np.full(4, _thermal.T_AMBIENT_C)
         node_of_pe = _thermal.cluster_nodes(db)
@@ -152,27 +166,36 @@ def simulate(db: ResourceDB, apps: Sequence[Application], trace: JobTrace,
             p[node_of_pe[j]] += idle_power(pe) * idle_frac
         return p
 
+    def nearest_level(cluster: int, f: float) -> int:
+        # nearest-level handoff (update() returns a ladder entry)
+        opps = cl_opps[cluster]
+        return min(range(len(opps)), key=lambda i: abs(opps[i] - f))
+
     def advance_windows(now: float) -> None:
         nonlocal next_window_end, temps
         while window_us and next_window_end <= now:
             w0 = next_window_end - window_us
             new_freq = {}
+            util = {}
             for c in clusters:
-                u = window_util(c, w0, next_window_end)
-                new_freq[c] = governor.update(cl_type[c], freq[c], u)
-            if throttle:
+                util[c] = window_util(c, w0, next_window_end)
+                new_freq[c] = governor.update(cl_type[c], freq[c], util[c])
+            if throttle or recording:
                 p = window_node_power(w0, next_window_end)
                 temps = _thermal.exact_step(temps, p, *rc_ab)
+            if throttle:
                 for c in clusters:
-                    opps = cl_opps[c]
-                    # nearest-level handoff (update() returns a ladder entry)
-                    cur = min(range(len(opps)),
-                              key=lambda i: abs(opps[i] - new_freq[c]))
+                    cur = nearest_level(c, new_freq[c])
                     idx = throttle_index(
                         np.asarray([cur]),
                         np.asarray([temps[cl_node[c]]]), pol.thermal_cap_c)
-                    new_freq[c] = opps[int(idx[0])]
+                    new_freq[c] = cl_opps[c][int(idx[0])]
             freq.update(new_freq)
+            if recording:
+                telemetry.on_window(
+                    next_window_end, util, dict(freq),
+                    {c: nearest_level(c, freq[c]) for c in clusters},
+                    p, temps)
             # records drained before this boundary can never overlap a later
             # window — prune so the scans stay O(in-flight), not O(history)
             committed[:] = [r for r in committed
@@ -309,6 +332,12 @@ def simulate(db: ResourceDB, apps: Sequence[Application], trace: JobTrace,
     for r in records:
         job_finish[r.job_id] = max(job_finish[r.job_id], r.finish_us)
     makespan = float(max((r.finish_us for r in records), default=0.0))
+    if recording:
+        # drain the windows between the last decision epoch and the makespan
+        # (mirroring the JAX kernel's post-scan drain): the timeline covers
+        # the execution tail, including the final partial window
+        while next_window_end - window_us < makespan:
+            advance_windows(next_window_end)
     intervals = [(r.pe_id, r.start_us, r.finish_us,
                   r.freq_ghz if db.pes[r.pe_id].is_cpu else 0.0) for r in records]
     energy = energy_from_schedule(db, intervals, makespan)

@@ -21,6 +21,7 @@ import numpy as np
 
 from ..core.applications import Application
 from ..core.jobgen import JobTrace
+from ..obs import metrics as _metrics
 from .batch import DesignBatch, build_design_batch
 from .pareto import pareto_mask, pareto_order
 from .space import DesignPoint, DesignSpace
@@ -194,15 +195,19 @@ def pareto_search(space: DesignSpace, apps: Sequence[Application],
         if not candidates:
             break
         seen.update(candidates)
-        ev = (successive_halving(candidates, apps, traces, policy,
-                                 pad_pes=pad_pes, **eval_kw) if halving
-              else evaluate(candidates, apps, traces, policy,
-                            pad_pes=pad_pes, **eval_kw))
+        t_round = _metrics.timer("dse.pareto_search.round")
+        with t_round:
+            ev = (successive_halving(candidates, apps, traces, policy,
+                                     pad_pes=pad_pes, **eval_kw) if halving
+                  else evaluate(candidates, apps, traces, policy,
+                                pad_pes=pad_pes, **eval_kw))
+        _metrics.counter("dse.search.designs_evaluated").inc(ev.num_designs)
         archive = ev if archive is None else _concat(archive, ev)
         front = archive.front_mask()
         round_stats.append(dict(round=rnd, evaluated=ev.num_designs,
                                 archive=archive.num_designs,
-                                front=int(front.sum())))
+                                front=int(front.sum()),
+                                wall_s=t_round.last_s))
         if rnd == rounds - 1:
             break
         # next generation: neighbourhood of the front, best-crowding first

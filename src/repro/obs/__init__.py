@@ -1,0 +1,44 @@
+"""repro.obs — unified run instrumentation (DESIGN.md §11).
+
+Three surfaces, one package:
+
+* :mod:`repro.obs.metrics` — named counters/timers (generalising the old
+  ``sweep.compile_count`` mutable-list hack) plus the run manifest attached
+  to every ``Result`` and every ``BENCH_*.json``;
+* :mod:`repro.obs.telemetry` — per-sampling-window ``(W, C)`` timelines of
+  cluster frequency, utilisation, power and RC node temperature, recorded by
+  both simulation kernels without perturbing them;
+* :mod:`repro.obs.trace` — Chrome trace-event JSON (Perfetto-loadable) of
+  the realised schedule: one track per PE, counter tracks for frequency and
+  temperature.
+
+``python -m repro.obs.report`` renders timeline summaries from run/bench
+JSON files and writes the Perfetto trace.
+
+Only :mod:`.metrics` (stdlib-only) is imported eagerly — the simulation
+kernels import it for their compile counters, so this package must not
+import them back at module scope (lazy re-exports below break the cycle).
+"""
+from . import metrics
+from .metrics import Counter, Timer, counter, run_manifest, scenario_hash, timer
+
+_LAZY = {
+    "Telemetry": "telemetry",
+    "TelemetryRecorder": "telemetry",
+    "chrome_trace": "trace",
+    "write_chrome_trace": "trace",
+    "validate_chrome_trace": "trace",
+    "bench_cli": "bench",
+}
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f".{mod}", __name__), name)
+
+
+__all__ = ["metrics", "Counter", "Timer", "counter", "timer", "run_manifest",
+           "scenario_hash", *_LAZY]

@@ -1,0 +1,52 @@
+"""Shared benchmark CLI harness (DESIGN.md §11).
+
+Every ``benchmarks/bench_*`` module exposes ``run() -> [(name, value,
+derived), ...]``; :func:`bench_cli` is the one ``main()`` they all share —
+it prints the CSV rows, and under ``--json`` writes a schema-tagged payload
+``{"manifest": <run manifest>, "rows": [...]}`` so every ``BENCH_*.json``
+is self-describing (scenario hashes, device platform, jit compile counts,
+wall time).  ``python -m repro.obs.report BENCH_x.json`` renders these.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from . import metrics
+
+BENCH_SCHEMA = "repro.obs/bench/v1"
+
+Rows = List[Tuple[str, float, str]]
+
+
+def rows_payload(rows: Rows, name: str, wall_s: float) -> dict:
+    """The ``BENCH_*.json`` payload: run manifest + measurement rows."""
+    return {
+        "schema": BENCH_SCHEMA,
+        "manifest": metrics.run_manifest(bench=name, wall_s=wall_s),
+        "rows": [dict(name=n, value=float(v), derived=str(d))
+                 for n, v, d in rows],
+    }
+
+
+def bench_cli(run_fn: Callable[[], Rows], name: str,
+              description: Optional[str] = None,
+              argv: Optional[Sequence[str]] = None) -> int:
+    """Run one benchmark module as a CLI: print the CSV rows, honour the
+    ``--json PATH`` flag (the CI perf artifact)."""
+    ap = argparse.ArgumentParser(description=description)
+    ap.add_argument("--json", metavar="PATH",
+                    help="also dump rows + run manifest as JSON "
+                         "(CI perf artifact)")
+    args = ap.parse_args(argv)
+    wall = metrics.timer(f"bench.{name}.wall")
+    with wall:
+        rows = run_fn()
+    print("name,value,derived")
+    for n, v, d in rows:
+        print(f"{n},{v:.4f},{d}")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(rows_payload(rows, name, wall.last_s), fh, indent=2)
+    return 0

@@ -88,7 +88,11 @@ class Scenario:
                     tuple, e.g. ``(("up_threshold", 0.9),)``;
       thermal     — peak-temperature evaluation settings;
       failures    — fail-stop events ((pe_id, fail_time_us), …), reference
-                    backend only.
+                    backend only;
+      telemetry   — record per-sampling-window timelines (frequency,
+                    utilisation, power, temperature) on ``Result.telemetry``
+                    (DESIGN.md §11).  Observation-only: the simulated
+                    schedule and its metrics are unchanged.
     """
     design: DesignPoint = DesignPoint()
     apps: Tuple[Union[str, Application], ...] = ("wifi_tx",)
@@ -98,6 +102,7 @@ class Scenario:
     governor_params: Tuple[Tuple[str, float], ...] = ()
     thermal: ThermalSpec = ThermalSpec()
     failures: Tuple[Tuple[int, float], ...] = ()
+    telemetry: bool = False
 
     # -- materialisation (the single construction point) -------------------
     def soc(self) -> ResourceDB:

@@ -44,6 +44,8 @@ class Result:
     peak_temp_c: float
     utilization: np.ndarray            # (num_pes,) busy / makespan
     raw: Any                           # SimResult (ref) | output dict (jax)
+    telemetry: Optional[Any] = None    # obs.telemetry.Telemetry when recorded
+    manifest: Optional[Dict] = None    # obs.metrics.run_manifest (DESIGN §11)
 
     @property
     def energy_report(self) -> Optional[EnergyReport]:
@@ -51,7 +53,7 @@ class Result:
 
     @classmethod
     def from_ref(cls, scenario: Scenario, db: ResourceDB,
-                 res: SimResult) -> "Result":
+                 res: SimResult, telemetry=None) -> "Result":
         split = _thermal.node_power_split(db, res.energy.energy_per_pe_j,
                                           res.makespan_us)
         peak = float(_thermal.steady_state(split)[:3].max())
@@ -62,11 +64,12 @@ class Result:
                    energy_j=float(res.energy.total_energy_j),
                    avg_power_w=float(res.energy.avg_power_w),
                    peak_temp_c=peak,
-                   utilization=res.pe_utilization(db), raw=res)
+                   utilization=res.pe_utilization(db), raw=res,
+                   telemetry=telemetry)
 
     @classmethod
     def from_jax(cls, scenario: Scenario, out: Dict, num_pes: int,
-                 peak_temp_c: float) -> "Result":
+                 peak_temp_c: float, telemetry=None) -> "Result":
         makespan = float(np.asarray(out["makespan_us"]))
         num_jobs = int(np.asarray(out["job_finish"]).shape[0])
         energy = float(np.asarray(out["energy_j"]))
@@ -77,7 +80,8 @@ class Result:
                    makespan_us=makespan, energy_j=energy,
                    avg_power_w=energy / max(makespan * 1e-6, 1e-12),
                    peak_temp_c=float(peak_temp_c),
-                   utilization=busy / max(makespan, 1e-9), raw=out)
+                   utilization=busy / max(makespan, 1e-9), raw=out,
+                   telemetry=telemetry)
 
 
 @dataclasses.dataclass
@@ -93,6 +97,8 @@ class SweepResult:
     energy_j: np.ndarray
     peak_temp_c: np.ndarray
     busy_per_pe_us: np.ndarray         # shape + (padded num_pes,)
+    telemetry: Optional[np.ndarray] = None   # object array of Telemetry
+                                             # (axes shape), when recorded
 
     @property
     def shape(self) -> Tuple[int, ...]:

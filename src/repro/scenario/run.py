@@ -23,6 +23,8 @@ from ..core import simkernel_ref as _refk
 from ..core.simkernel_jax import SimTables
 from ..core.thermal import cluster_nodes
 from ..dse import thermal_jax as _thermal_jax
+from ..obs import metrics as _metrics
+from ..obs import telemetry as _obs_tel
 from .config import Scenario, ThermalSpec, TraceSpec
 from .result import Result
 
@@ -40,7 +42,8 @@ def _tables_key(scn: Scenario) -> Scenario:
     """
     scheduler = scn.scheduler if scn.scheduler == "table" else "etf"
     key = dataclasses.replace(scn, trace=TraceSpec(), failures=(),
-                              thermal=ThermalSpec(), scheduler=scheduler)
+                              thermal=ThermalSpec(), scheduler=scheduler,
+                              telemetry=False)
     if key.make_policy().dynamic:
         key = dataclasses.replace(key, governor="ondemand",
                                   governor_params=())
@@ -78,7 +81,7 @@ def _peak_temp_single(start, finish, onpe, scheduled, nodes, p_act, p_idle,
 
 
 def run(scenario: Scenario, backend: str = "ref", *,
-        trace_override=None) -> Result:
+        trace_override=None, telemetry: Optional[bool] = None) -> Result:
     """Simulate one scenario.
 
     ``backend="ref"``: the event-heap reference kernel — all governors and
@@ -87,22 +90,42 @@ def run(scenario: Scenario, backend: str = "ref", *,
     the tables and report the binned RC co-simulation's peak temperature;
     the ondemand family runs the closed DTPM loop inside the epoch scan and
     reports the peak temperature of its inline RC feedback (DESIGN.md §7).
-    Both return the same :class:`Result` surface.
+    Both return the same :class:`Result` surface, carrying an
+    ``obs.metrics`` run manifest.
 
     ``trace_override``: a pre-materialised ``JobTrace`` replacing the
     scenario's trace spec (plumbing for ``sweep`` axes that carry explicit
     traces).
+
+    ``telemetry`` (default: ``scenario.telemetry``): also record per-window
+    (W, C) frequency/utilisation/power/temperature timelines on
+    ``Result.telemetry`` (DESIGN.md §11).  Observation-only: with a dynamic
+    governor the ref kernel records its sampling windows in-loop and the jax
+    backend replays the kernel's window carry as a separate jitted scan —
+    the simulation program and its outputs are identical either way
+    (asserted in tests/test_obs.py).
     """
+    want_tel = scenario.telemetry if telemetry is None else bool(telemetry)
+
     if backend == "ref":
         db = scenario.soc()
+        pol = scenario.make_policy()
+        governor = scenario.make_governor()
+        rec = None
+        if want_tel and pol.dynamic:
+            rec = _obs_tel.TelemetryRecorder(pol.sample_window_us)
         res = _refk.simulate(db, scenario.applications(),
                              trace_override or scenario.job_trace(),
-                             scenario.make_scheduler(),
-                             scenario.make_governor(),
-                             failures=list(scenario.failures) or None)
-        return Result.from_ref(scenario, db, res)
+                             scenario.make_scheduler(), governor,
+                             failures=list(scenario.failures) or None,
+                             telemetry=rec)
+        tel = None
+        if want_tel:
+            tel = (rec.build(_obs_tel.domain_count(db)) if rec is not None
+                   else _obs_tel.ref_static_telemetry(db, res, governor))
+        result = Result.from_ref(scenario, db, res, telemetry=tel)
 
-    if backend == "jax":
+    elif backend == "jax":
         if scenario.failures:
             raise ValueError("fail-stop injection is reference-kernel only; "
                              "use backend='ref'")
@@ -113,16 +136,28 @@ def run(scenario: Scenario, backend: str = "ref", *,
             out = _jaxk.simulate_jax_dtpm(tables, scenario.scheduler,
                                           trace.arrival_us, trace.app_index,
                                           pol)
-            return Result.from_jax(scenario, out, scenario.design.num_pes,
-                                   float(out["peak_temp_c"]))
-        out = _jaxk.simulate_jax(tables, scenario.scheduler,
-                                 trace.arrival_us, trace.app_index)
-        peak = _peak_temp_single(
-            out["start"], out["finish"], out["onpe"], out["scheduled"],
-            _cached_nodes(scenario.design),
-            tables.power_active, tables.power_idle, out["makespan_us"],
-            bins=scenario.thermal.bins, repeats=scenario.thermal.repeats)
-        return Result.from_jax(scenario, out, scenario.design.num_pes,
-                               float(peak))
+            tel = (_obs_tel.jax_dtpm_telemetry(tables, pol, out,
+                                               trace.app_index)
+                   if want_tel else None)
+            result = Result.from_jax(scenario, out, scenario.design.num_pes,
+                                     float(out["peak_temp_c"]), telemetry=tel)
+        else:
+            out = _jaxk.simulate_jax(tables, scenario.scheduler,
+                                     trace.arrival_us, trace.app_index)
+            peak = _peak_temp_single(
+                out["start"], out["finish"], out["onpe"], out["scheduled"],
+                _cached_nodes(scenario.design),
+                tables.power_active, tables.power_idle, out["makespan_us"],
+                bins=scenario.thermal.bins, repeats=scenario.thermal.repeats)
+            tel = (_obs_tel.jax_static_telemetry(
+                       scenario.soc(), scenario.make_governor(), tables, out,
+                       trace.app_index)
+                   if want_tel else None)
+            result = Result.from_jax(scenario, out, scenario.design.num_pes,
+                                     float(peak), telemetry=tel)
+    else:
+        raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
 
-    raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+    result.manifest = _metrics.run_manifest(scenario=scenario,
+                                            backend=backend)
+    return result

@@ -44,6 +44,8 @@ from ..dse.batch import (_simulate_grid, pad_node_map, stack_tables,
                          stack_traces)
 from ..dse.space import DesignPoint
 from ..dse.thermal_jax import peak_temperature_grid
+from ..obs import metrics as _metrics
+from ..obs import telemetry as _obs_tel
 from .config import Scenario, TraceSpec
 from .result import SweepResult
 from .run import run, tables_for
@@ -57,9 +59,13 @@ AXIS_ALIASES = {
 _DESIGN_FIELDS = {f.name for f in dataclasses.fields(DesignPoint)}
 _TRACE_FIELDS = {f.name for f in dataclasses.fields(TraceSpec)}
 
-# number of times a fused grid program has been traced (re-compiled);
-# the one-program-per-policy-shape sweep contract is asserted against this
-compile_count = [0]
+# number of times a fused grid program has been traced (re-compiled); the
+# one-program-per-policy-shape sweep contract is asserted against this.
+# The registered obs counter IS the module attribute — ``compile_count[0]``
+# keeps reading/writing it (deprecated one-element-list alias, kept for one
+# release); new code uses ``compile_count.value`` / the ``obs.metrics``
+# registry (DESIGN.md §11).
+compile_count = _metrics.counter("scenario.sweep.compile_count")
 
 
 def _canon(name: str) -> str:
@@ -116,7 +122,7 @@ def _lane_trace(scn: Scenario, names: Sequence[str],
 def _sweep_grid(tables, node_of_pe, arrival, app_idx, policy, num_jobs,
                 bins, repeats):
     """Schedule simulation + thermal scan for (D, S) lanes, ONE program."""
-    compile_count[0] += 1                  # python body runs only on trace
+    compile_count.inc()                    # python body runs only on trace
     out = _simulate_grid(tables, policy, num_jobs, arrival, app_idx)
     temps = peak_temperature_grid(out, node_of_pe, tables.power_active,
                                   tables.power_idle, bins=bins,
@@ -129,7 +135,7 @@ def _sweep_grid_dtpm(tables, gov, arrival, app_idx, policy, num_jobs):
     """Closed-loop DTPM lanes: (D designs, G policies, S traces) in ONE
     program.  Peak temperature comes from the kernel's inline RC loop (the
     one the throttle feedback integrates), so no post-hoc thermal scan."""
-    compile_count[0] += 1                  # python body runs only on trace
+    compile_count.inc()                    # python body runs only on trace
     per_trace = jax.vmap(
         lambda tb, g, a, i: _simulate_dtpm(tb, policy, num_jobs, a, i, g),
         in_axes=(None, None, 0, 0))
@@ -154,7 +160,7 @@ def _design_lanes(base: Scenario, design_axes: List[str],
 
 def sweep(scenario: Scenario, axes: Dict[str, Sequence],
           backend: str = "jax", pad_pes: Optional[int] = None,
-          design_batch=None) -> SweepResult:
+          design_batch=None, telemetry: Optional[bool] = None) -> SweepResult:
     """Simulate the cross-product of ``axes`` around ``scenario``.
 
     ``axes`` maps axis names to value sequences; result arrays are shaped
@@ -163,6 +169,13 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
     ``design_batch`` (a prebuilt ``repro.dse.DesignBatch``) short-circuits
     table construction when the caller already stacked the design axis —
     it must correspond to a single ``"design"`` axis with matching points.
+
+    ``telemetry`` (default: ``scenario.telemetry``) fills
+    ``SweepResult.telemetry`` with one per-window
+    :class:`~repro.obs.telemetry.Telemetry` per lane (an object array shaped
+    like the axes).  On the jax backend the lanes' timelines are replayed
+    from the already-computed grid outputs through the kernels' jitted
+    telemetry scans — the simulations are not re-run (DESIGN.md §11).
     """
     if not axes:
         raise ValueError("axes must name at least one swept dimension")
@@ -190,8 +203,9 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
                 f"axis '{whole}' conflicts with per-field axes {fields}: "
                 f"a whole-'{whole}' value replaces the fields those axes set")
 
+    want_tel = scenario.telemetry if telemetry is None else bool(telemetry)
     if backend == "ref":
-        return _sweep_ref(scenario, names, values)
+        return _sweep_ref(scenario, names, values, want_tel)
     if backend != "jax":
         raise ValueError(f"unknown backend {backend!r}")
     if scenario.failures:
@@ -305,6 +319,10 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
             energy_j=np.asarray(out["energy_j"], np.float64),
             peak_temp_c=np.asarray(temps, np.float64),
             busy_per_pe_us=np.asarray(out["busy_per_pe_us"], np.float64)))
+        if want_tel:
+            per_static[-1]["telemetry"] = _telemetry_grid(
+                s_scn, design_axes, design_combos, policies, tables,
+                app_idx, out, dynamic)
 
     # assemble: (static..., design..., policy..., trace..., extra) then the
     # user's axes-dict order
@@ -330,11 +348,47 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
         throughput_jobs_per_ms=num_jobs / np.maximum(makespan, 1e-9) * 1e3,
         makespan_us=makespan, energy_j=_assemble("energy_j"),
         peak_temp_c=_assemble("peak_temp_c"),
-        busy_per_pe_us=_assemble("busy_per_pe_us"))
+        busy_per_pe_us=_assemble("busy_per_pe_us"),
+        telemetry=_assemble("telemetry") if want_tel else None)
+
+
+def _telemetry_grid(s_scn: Scenario, design_axes: List[str],
+                    design_combos: List[Tuple], policies, tables,
+                    app_idx, out, dynamic: bool) -> np.ndarray:
+    """Per-lane :class:`Telemetry` objects for one static combo, as an
+    object array shaped like the internal grid ((D, G, S) dynamic,
+    (D, S) static).  Each lane slices the stacked tables (leaf-wise) and the
+    grid outputs, then replays the kernel's jitted telemetry scan — the
+    simulation itself is not re-run."""
+    keys = ("scheduled", "start", "finish", "onpe", "makespan_us")
+    D = len(design_combos)
+    S = int(np.asarray(app_idx).shape[0])
+    if dynamic:
+        G = len(policies)
+        grid = np.empty((D, G, S), object)
+        for d in range(D):
+            tb = jax.tree_util.tree_map(lambda x, _d=d: x[_d], tables)
+            for g in range(G):
+                for s in range(S):
+                    out_l = {k: out[k][d, g, s] for k in keys + ("onopp",)}
+                    grid[d, g, s] = _obs_tel.jax_dtpm_telemetry(
+                        tb, policies[g], out_l, app_idx[s])
+        return grid
+    grid = np.empty((D, S), object)
+    for d in range(D):
+        tb = jax.tree_util.tree_map(lambda x, _d=d: x[_d], tables)
+        lane_scn = _apply_axes(s_scn, design_axes, design_combos[d])
+        db, gov = lane_scn.soc(), lane_scn.make_governor()
+        for s in range(S):
+            out_l = {k: out[k][d, s] for k in keys}
+            grid[d, s] = _obs_tel.jax_static_telemetry(db, gov, tb, out_l,
+                                                       app_idx[s])
+    return grid
 
 
 def _sweep_ref(scenario: Scenario, names: List[str],
-               values: Dict[str, Tuple]) -> SweepResult:
+               values: Dict[str, Tuple],
+               want_tel: bool = False) -> SweepResult:
     """Cross-product sweep through the reference kernel, lane by lane."""
     shape = tuple(len(values[n]) for n in names)
     lanes = list(itertools.product(*(values[n] for n in names)))
@@ -342,7 +396,8 @@ def _sweep_ref(scenario: Scenario, names: List[str],
     for combo in lanes:
         scn = _apply_axes(scenario, names, combo)
         trace = _lane_trace(scn, names, combo)
-        results.append(run(scn, backend="ref", trace_override=trace))
+        results.append(run(scn, backend="ref", trace_override=trace,
+                           telemetry=want_tel))
     P = max(r.utilization.shape[0] for r in results)
     busy = np.zeros((len(lanes), P), np.float64)
     for i, r in enumerate(results):
@@ -352,10 +407,16 @@ def _sweep_ref(scenario: Scenario, names: List[str],
         return np.asarray([getattr(r, field) for r in results],
                           np.float64).reshape(shape)
 
+    tel = None
+    if want_tel:
+        tel = np.empty(len(lanes), object)
+        tel[:] = [r.telemetry for r in results]
+        tel = tel.reshape(shape)
     return SweepResult(
         base=scenario, backend="ref", axes=values,
         avg_latency_us=_arr("avg_latency_us"),
         throughput_jobs_per_ms=_arr("throughput_jobs_per_ms"),
         makespan_us=_arr("makespan_us"), energy_j=_arr("energy_j"),
         peak_temp_c=_arr("peak_temp_c"),
-        busy_per_pe_us=busy.reshape(*shape, P))
+        busy_per_pe_us=busy.reshape(*shape, P),
+        telemetry=tel)

@@ -79,7 +79,9 @@ class ServeEngine:
         pos = jnp.asarray(self.pos)                       # (S,) per-slot
         logits, self.cache = self._decode(self.params, self.cache, toks, pos)
         self.ticks += 1
-        now = time.time() - getattr(self, "_t0", 0.0)   # engine-relative clock
+        # engine-relative monotonic clock (perf_counter: immune to wall-clock
+        # adjustments, unlike time.time)
+        now = time.perf_counter() - getattr(self, "_t0", 0.0)
         for i in act:
             r = self.active[i]
             nxt = int(jnp.argmax(logits[i, -1]))
@@ -97,10 +99,10 @@ class ServeEngine:
     def run(self, requests: List[Request]) -> List[Request]:
         """Process requests to completion (arrival-ordered admission)."""
         pending = sorted(requests, key=lambda r: r.arrival_s)
-        t0 = time.time()
+        t0 = time.perf_counter()
         self._t0 = t0
         while pending or any(r is not None for r in self.active):
-            now = time.time() - t0
+            now = time.perf_counter() - t0
             for i in range(self.S):
                 if self.active[i] is None and pending and \
                         pending[0].arrival_s <= now:
