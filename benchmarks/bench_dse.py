@@ -3,7 +3,7 @@ vs a per-design ``run()`` loop — the scale story the dse subsystem exists
 for.  Both sides are declared through one ``Scenario``; both include the
 fused RC thermal co-simulation."""
 from repro.dse import DesignSpace, build_design_batch, evaluate
-from repro.obs import bench_cli, timer
+from repro.obs import bench_cli, scaled, timer
 from repro.scenario import Scenario, TraceSpec, run as run_scenario, sweep
 
 NUM_DESIGNS = 64
@@ -12,33 +12,34 @@ NUM_JOBS = 32
 RATE = 20.0
 POLICY = "etf"
 
-BASE = Scenario(apps=("wifi_tx", "wifi_rx"), scheduler=POLICY,
-                governor="design",
-                trace=TraceSpec(rate_jobs_per_ms=RATE, num_jobs=NUM_JOBS))
 
-
-def run():
-    points = DesignSpace().sample_lhs(NUM_DESIGNS, seed=0)
-    seeds = list(range(NUM_TRACES))
+def run(smoke: bool = False):
+    num_designs = scaled(NUM_DESIGNS, 8, smoke)
+    base = Scenario(apps=("wifi_tx", "wifi_rx"), scheduler=POLICY,
+                    governor="design",
+                    trace=TraceSpec(rate_jobs_per_ms=RATE,
+                                    num_jobs=scaled(NUM_JOBS, 8, smoke)))
+    points = DesignSpace().sample_lhs(num_designs, seed=0)
+    seeds = list(range(scaled(NUM_TRACES, 2, smoke)))
     axes = {"design": points, "seed": seeds}
     rows = []
 
     # one stacked design batch shared by the sweep and the Pareto front
-    batch = build_design_batch(points, BASE.applications())
+    batch = build_design_batch(points, base.applications())
 
     # batched sweep: cold (compile) and warm
     t = timer("bench.dse.batched")
     with t:
-        sweep(BASE, axes=axes, design_batch=batch)
+        sweep(base, axes=axes, design_batch=batch)
     cold = t.last_s
     with t:
-        sweep(BASE, axes=axes, design_batch=batch)
+        sweep(base, axes=axes, design_batch=batch)
     warm = t.last_s
-    rows.append(("dse/batched/cold", cold * 1e6 / NUM_DESIGNS,
+    rows.append(("dse/batched/cold", cold * 1e6 / num_designs,
                  "us_per_design_incl_compile"))
-    rows.append(("dse/batched/warm", warm * 1e6 / NUM_DESIGNS,
+    rows.append(("dse/batched/warm", warm * 1e6 / num_designs,
                  "us_per_design"))
-    rows.append(("dse/batched/throughput", NUM_DESIGNS / warm,
+    rows.append(("dse/batched/throughput", num_designs / warm,
                  "design_points_per_sec"))
 
     # per-design run() loop on the same workload (the baseline the batch
@@ -49,7 +50,7 @@ def run():
     def loop_once():
         for p in subset:
             for s in seeds:
-                run_scenario(BASE.replace(design=p).with_seed(s),
+                run_scenario(base.replace(design=p).with_seed(s),
                              backend="jax")
 
     t_loop = timer("bench.dse.loop")
@@ -64,12 +65,12 @@ def run():
     rows.append(("dse/loop/warm", loop_warm * 1e6 / len(subset),
                  "us_per_design"))
     rows.append(("dse/speedup_vs_loop",
-                 (loop_warm / len(subset)) / (warm / NUM_DESIGNS),
+                 (loop_warm / len(subset)) / (warm / num_designs),
                  "x_batched_warm_vs_loop_warm"))
 
     # Pareto front over the same scenario grid (facade-delegating evaluate)
-    traces = [BASE.with_seed(s).job_trace() for s in seeds]
-    res = evaluate(points, BASE.applications(), traces, policy=POLICY,
+    traces = [base.with_seed(s).job_trace() for s in seeds]
+    res = evaluate(points, base.applications(), traces, policy=POLICY,
                    batch=batch)
     rows.append(("dse/front_size", float(res.front_mask().sum()),
                  "non_dominated_designs"))

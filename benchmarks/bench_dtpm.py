@@ -12,7 +12,9 @@ optionally dumps the rows + run manifest as JSON (the CI perf artifact).
 """
 from __future__ import annotations
 
-from repro.obs import bench_cli, timer
+import dataclasses
+
+from repro.obs import bench_cli, scaled, timer
 from repro.scenario import Scenario, TraceSpec, run as run_scenario
 
 SCN = Scenario(apps=("wifi_tx",),
@@ -33,11 +35,13 @@ CASES = [
 ]
 
 
-def run():
+def run(smoke: bool = False):
+    base = SCN.replace(trace=dataclasses.replace(
+        SCN.trace, num_jobs=scaled(SCN.trace.num_jobs, 30, smoke)))
     rows = []
     t = timer("bench.dtpm.warm")
     for label, gov, params, backend in CASES:
-        scn = SCN.replace(governor=gov, governor_params=params)
+        scn = base.replace(governor=gov, governor_params=params)
         res = run_scenario(scn, backend=backend)
         if backend == "jax":
             # warm wall-clock of the compiled DTPM kernel (compile excluded)

@@ -4,32 +4,34 @@ MET / ETF / ILP-table schedulers on the Table-2 SoC (WiFi-TX workload).
 All work is declared through one ``Scenario``; the rate × seed grid per
 scheduler is a single ``sweep(..., backend="ref")``.
 """
-from repro.obs import bench_cli, timer
+from repro.obs import bench_cli, scaled, timer
 from repro.scenario import Scenario, TraceSpec, sweep
 
 RATES = [1, 5, 10, 20, 30, 40, 50, 60, 70, 80]
 NUM_JOBS = 120
 SEEDS = (0, 1, 2)
 
-BASE = Scenario(apps=("wifi_tx",), trace=TraceSpec(num_jobs=NUM_JOBS))
 
-
-def run():
+def run(smoke: bool = False):
+    rates = scaled(RATES, [1, 20, 80], smoke)
+    seeds = scaled(SEEDS, (0,), smoke)
+    base = Scenario(apps=("wifi_tx",),
+                    trace=TraceSpec(num_jobs=scaled(NUM_JOBS, 24, smoke)))
     rows = []
     curves = {}
     t = timer("bench.fig3.sweep")
     for name, policy in [("met", "met"), ("etf", "etf"), ("ilp", "table")]:
-        scn = BASE.replace(scheduler=policy)
+        scn = base.replace(scheduler=policy)
         with t:
-            sr = sweep(scn, axes={"rate": RATES, "seed": SEEDS}, backend="ref")
-        dt = t.last_us / (len(RATES) * len(SEEDS))
+            sr = sweep(scn, axes={"rate": rates, "seed": seeds}, backend="ref")
+        dt = t.last_us / (len(rates) * len(seeds))
         ys = [float(v) for v in sr.avg_latency_us.mean(axis=1)]
         curves[name] = ys
-        for rate, y in zip(RATES, ys):
+        for rate, y in zip(rates, ys):
             rows.append((f"fig3/{name}/rate{rate}", y, "avg_job_latency_us"))
         rows.append((f"fig3/{name}/sim_cost", dt, "us_per_simulation"))
     # the paper's qualitative claims, as derived checks
-    lo, hi = 0, len(RATES) - 1
+    lo, hi = 0, len(rates) - 1
     rows.append(("fig3/check_low_rate_similar",
                  max(curves[n][lo] for n in curves)
                  / min(curves[n][lo] for n in curves),

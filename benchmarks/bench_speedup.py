@@ -4,27 +4,29 @@ the whole workload grid as ONE vmapped/jitted ``sweep`` (which also fuses
 the RC thermal co-simulation)."""
 import numpy as np
 
-from repro.obs import bench_cli, timer
+from repro.obs import bench_cli, scaled, timer
 from repro.scenario import Scenario, TraceSpec, run as run_scenario, sweep
 
 NUM_JOBS = 80
 BATCH = 64          # workload points evaluated at once by the JAX kernel
 
 BASE = Scenario(apps=("wifi_tx",), scheduler="etf")
-SPECS = [TraceSpec(rate_jobs_per_ms=5.0 + 70.0 * i / BATCH,
-                   num_jobs=NUM_JOBS, seed=i) for i in range(BATCH)]
 
 
-def run():
+def run(smoke: bool = False):
+    batch = scaled(BATCH, 8, smoke)
+    num_jobs = scaled(NUM_JOBS, 16, smoke)
+    specs = [TraceSpec(rate_jobs_per_ms=5.0 + 70.0 * i / batch,
+                       num_jobs=num_jobs, seed=i) for i in range(batch)]
     # traces materialised once, outside every timed region
-    traces = [ts.materialize(BASE.app_names()) for ts in SPECS]
+    traces = [ts.materialize(BASE.app_names()) for ts in specs]
 
     # reference event-heap kernel, one scenario at a time
     t_ref = timer("bench.speedup.ref")
     with t_ref:
         ref_lat = [run_scenario(BASE.replace(trace=ts), backend="ref",
                                 trace_override=tr).avg_latency_us
-                   for ts, tr in zip(SPECS, traces)]
+                   for ts, tr in zip(specs, traces)]
 
     # vectorised kernel: the full trace axis in one batched tensor program
     sr = sweep(BASE, axes={"trace": traces})         # includes jit compile
@@ -34,16 +36,16 @@ def run():
 
     agree = np.allclose(sr.avg_latency_us, np.asarray(ref_lat), rtol=1e-3)
     num_tasks = BASE.applications()[0].num_tasks
-    per_sim_ref = t_ref.last_s / BATCH * 1e6
-    per_sim_jax = t_jax.last_s / BATCH * 1e6
+    per_sim_ref = t_ref.last_s / batch * 1e6
+    per_sim_jax = t_jax.last_s / batch * 1e6
     return [
         ("speedup/ref_kernel", per_sim_ref, "us_per_simulation"),
         ("speedup/jax_kernel_batched", per_sim_jax,
          "us_per_simulation_incl_thermal"),
         ("speedup/jax_over_ref", per_sim_ref / per_sim_jax,
-         f"x_speedup(batch={BATCH},agree={agree})"),
+         f"x_speedup(batch={batch},agree={agree})"),
         ("speedup/events_per_sec",
-         BATCH * NUM_JOBS * num_tasks / t_jax.last_s, "scheduled_tasks_per_s"),
+         batch * num_jobs * num_tasks / t_jax.last_s, "scheduled_tasks_per_s"),
     ]
 
 

@@ -1,0 +1,26 @@
+"""repro.analysis — static JAX-contract lints + compile-count gate.
+
+Pure-AST rules (the audited modules are never imported, so linting the JAX
+kernels costs no device init and works without jax installed):
+
+* **JX001** tracer-leak, **JX002** host-numpy-in-jit, **JX003** impure-jit
+  — on the jit-reachable set (:mod:`.reachability`)
+* **PT001** pytree registration contracts
+* **UN001** unit-suffix discipline on result structs
+* **CC001** compile-count regression gate over ``BENCH_*.json`` artifacts
+
+CLI: ``python -m repro.analysis`` (see ``--help``); config lives in the
+``[tool.repro.analysis]`` table of ``pyproject.toml``; inline waivers are
+``# lint: waive CODE -- justification``.  DESIGN.md §12 documents the
+rules and the waiver policy.
+"""
+from .config import ALL_RULES, AnalysisConfig, load_config
+from .engine import AnalysisReport, changed_files, run_analysis
+from .findings import Finding, render_report, report_payload
+from .compile_gate import check_compile_gate, load_contracts
+
+__all__ = [
+    "ALL_RULES", "AnalysisConfig", "AnalysisReport", "Finding",
+    "changed_files", "check_compile_gate", "load_config", "load_contracts",
+    "render_report", "report_payload", "run_analysis",
+]

@@ -1,0 +1,143 @@
+"""``python -m repro.analysis`` — the JAX-contract lint CLI.
+
+Examples::
+
+    python -m repro.analysis                      # lint configured paths
+    python -m repro.analysis --strict             # waivers need a reason
+    python -m repro.analysis --changed            # only files vs main
+    python -m repro.analysis --select JX001,JX003
+    python -m repro.analysis --report findings.json
+    python -m repro.analysis --compile-gate BENCH_*.json
+    python -m repro.analysis --list-rules
+
+Exit status: 0 when no *active* (unwaived) findings, 1 otherwise, 2 on
+usage errors.  Waived findings print with a ``(waived)`` tag and never
+gate; ``--strict`` additionally requires every waiver to carry a
+``-- justification`` (WV001).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from .compile_gate import check_compile_gate
+from .config import ALL_RULES, load_config
+from .engine import changed_files, run_analysis
+from .findings import dump_report, render_report
+
+_RULE_DOCS = {
+    "JX001": "tracer-leak: .item()/bool()/int()/float()/if/while on "
+             "traced values in jit-reachable code",
+    "JX002": "host-numpy-in-jit: np.* calls on traced data (use jnp)",
+    "JX003": "impure-jit: print/wall-clock/host-RNG/global or self "
+             "mutation inside jitted code",
+    "PT001": "pytree-contract: register_dataclass targets frozen, "
+             "data/meta split exact, meta fields hashable",
+    "UN001": "unit-suffix: numeric fields and payload keys on result "
+             "structs carry _us/_j/_w/_c/_hz/... suffixes",
+    "CC001": "compile-count gate: BENCH_*.json counters within "
+             "contracts.json budgets",
+    "WV001": "(strict only) waiver comment missing its -- justification",
+}
+
+
+def _codes(arg: Optional[str]) -> Optional[List[str]]:
+    if not arg:
+        return None
+    return [c.strip().upper() for c in arg.split(",") if c.strip()]
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static JAX-contract lints + compile-count gate "
+                    "(DESIGN.md §12)")
+    ap.add_argument("files", nargs="*",
+                    help="explicit files to lint (default: configured "
+                         "paths)")
+    ap.add_argument("--strict", action="store_true",
+                    help="waivers must carry a justification (WV001)")
+    ap.add_argument("--changed", action="store_true",
+                    help="lint only files changed vs --base")
+    ap.add_argument("--base", default="main",
+                    help="git base ref for --changed (default: main)")
+    ap.add_argument("--select", metavar="CODES",
+                    help="comma-separated rule codes to run exclusively")
+    ap.add_argument("--ignore", metavar="CODES",
+                    help="comma-separated rule codes to skip")
+    ap.add_argument("--report", metavar="PATH",
+                    help="write the findings report JSON (CI artifact)")
+    ap.add_argument("--root", metavar="DIR", default=None,
+                    help="repo root (default: nearest pyproject.toml)")
+    ap.add_argument("--compile-gate", nargs="+", metavar="BENCH_JSON",
+                    help="run only the CC001 gate over these bench "
+                         "artifacts")
+    ap.add_argument("--contracts", metavar="PATH", default=None,
+                    help="contracts.json for --compile-gate (default: "
+                         "from [tool.repro.analysis])")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print rule codes and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for code in (*ALL_RULES, "WV001"):
+            print(f"{code}  {_RULE_DOCS[code]}")
+        return 0
+
+    cfg = load_config(Path(args.root) if args.root else None)
+
+    if args.compile_gate:
+        contracts = Path(args.contracts) if args.contracts \
+            else cfg.root / cfg.contracts
+        try:
+            findings = check_compile_gate(contracts, args.compile_gate)
+        except (OSError, ValueError, KeyError) as exc:
+            print(f"error: {exc}", file=sys.stderr)
+            return 2
+        if findings:
+            print(render_report(findings))
+            if args.report:
+                dump_report(findings, args.report, rules=["CC001"])
+            return 1
+        print(f"CC001: {len(args.compile_gate)} bench artifact(s) within "
+              f"contract ({contracts})")
+        if args.report:
+            dump_report([], args.report, rules=["CC001"])
+        return 0
+
+    only: Optional[List[str]] = None
+    if args.changed:
+        only = changed_files(cfg.root, args.base)
+        lintable = {p for p in only
+                    if any(p.startswith(base) for base in cfg.paths)}
+        if not lintable:
+            print(f"--changed: no lintable files vs {args.base}")
+            return 0
+        only = sorted(lintable)
+    elif args.files:
+        only = args.files
+
+    try:
+        report = run_analysis(cfg, select=_codes(args.select),
+                              ignore=_codes(args.ignore),
+                              only_paths=only, strict=args.strict)
+    except ValueError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+
+    if args.report:
+        dump_report(report.findings, args.report, rules=list(report.rules),
+                    files=report.files)
+    if report.findings:
+        print(render_report(report.findings))
+    else:
+        scope = f"{len(only)} changed/selected file(s)" if only \
+            else f"{len(report.files)} file(s)"
+        print(f"clean: {scope}, rules {','.join(report.rules)}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

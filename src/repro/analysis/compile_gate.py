@@ -1,0 +1,90 @@
+"""CC001 — the jit compile-count regression gate.
+
+Recompilation is the silent perf killer in this codebase: a pytree whose
+static field became an array, an ``EpochSpec`` losing its hash, a sweep
+rebuilding its grid per call — all show up first as ``*.compile_count``
+creep, long before wall time makes it obvious.  The kernels already count
+every trace (``repro.obs.metrics``) and every ``BENCH_*.json`` embeds the
+counter snapshot in its run manifest, so the gate is pure bookkeeping:
+
+* ``contracts.json`` (checked in) records, per benchmark, the maximum
+  allowed value of each compile counter.
+* :func:`check_compile_gate` loads one or more ``BENCH_*.json`` artifacts
+  and emits a CC001 finding for every counter above its contract — and for
+  any benchmark that has *no* contract entry, so new benchmarks must
+  register a budget rather than silently escaping the gate.
+
+Raising a contract is a reviewed diff of ``contracts.json``, with the
+justification in the commit — exactly like a changed golden file.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Sequence
+
+from .findings import Finding
+
+CONTRACTS_SCHEMA = "repro.analysis/contracts/v1"
+
+
+def load_contracts(path: Path) -> Dict[str, Dict[str, int]]:
+    data = json.loads(Path(path).read_text())
+    if data.get("schema") != CONTRACTS_SCHEMA:
+        raise ValueError(f"{path}: expected schema {CONTRACTS_SCHEMA!r}, "
+                         f"got {data.get('schema')!r}")
+    return data["contracts"]
+
+
+def _bench_counters(payload: Dict) -> Dict[str, float]:
+    manifest = payload.get("manifest", {})
+    counters = manifest.get("metrics", {}).get("counters", {})
+    return {n: v for n, v in counters.items()
+            if n.endswith("compile_count")}
+
+
+def check_compile_gate(contracts_path: Path,
+                       bench_paths: Sequence[Path]) -> List[Finding]:
+    contracts = load_contracts(contracts_path)
+    out: List[Finding] = []
+    cpath = Path(contracts_path).as_posix()
+    for bp in bench_paths:
+        bp = Path(bp)
+        try:
+            payload = json.loads(bp.read_text())
+        except (OSError, json.JSONDecodeError) as exc:
+            out.append(Finding(code="CC001", path=bp.as_posix(), line=1,
+                               message=f"unreadable bench artifact: {exc}"))
+            continue
+        bench = payload.get("manifest", {}).get("bench")
+        if not bench:
+            out.append(Finding(code="CC001", path=bp.as_posix(), line=1,
+                               message="bench artifact has no "
+                                       "manifest.bench name"))
+            continue
+        contract = contracts.get(bench)
+        if contract is None:
+            out.append(Finding(
+                code="CC001", path=cpath, line=1,
+                message=f"benchmark `{bench}` has no compile-count "
+                        f"contract; add an entry before it lands in CI"))
+            continue
+        counters = _bench_counters(payload)
+        for name, limit in sorted(contract.items()):
+            actual = counters.get(name, 0)
+            if actual > limit:
+                out.append(Finding(
+                    code="CC001", path=cpath, line=1,
+                    message=f"`{bench}`: counter `{name}` hit "
+                            f"{actual:g} compiles, contract allows "
+                            f"{limit} — a jit cache key regressed "
+                            f"(or raise the contract with justification)"))
+        stray = sorted(set(counters) - set(contract))
+        for name in stray:
+            if counters[name] > 0:
+                out.append(Finding(
+                    code="CC001", path=cpath, line=1,
+                    message=f"`{bench}`: counter `{name}` "
+                            f"({counters[name]:g} compiles) is not in the "
+                            f"contract; budget it explicitly"))
+    return out

@@ -1,0 +1,156 @@
+"""Repo-root configuration for ``repro.analysis`` (``pyproject.toml``).
+
+The ``[tool.repro.analysis]`` block selects rules, lint paths and the UN001
+unit vocabulary::
+
+    [tool.repro.analysis]
+    paths = ["src/repro", "benchmarks", "examples"]
+    disable = []                      # rule codes switched off repo-wide
+    unit-suffixes = ["_j", "_w", ...] # accepted unit suffixes (UN001)
+    unit-structs = ["EnergyReport"]   # dataclasses UN001 audits
+    unit-allow = ["util*", "*_idx"]   # dimensionless names (fnmatch)
+    contracts = "src/repro/analysis/contracts.json"
+
+Python 3.10 has no ``tomllib``; a minimal single-section parser handles the
+subset this block uses (strings, string lists, booleans) when neither
+``tomllib`` nor ``tomli`` is importable — no new dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+ALL_RULES: Tuple[str, ...] = ("JX001", "JX002", "JX003", "PT001", "UN001",
+                              "CC001")
+
+DEFAULT_PATHS = ("src/repro", "benchmarks", "examples")
+DEFAULT_SUFFIXES = ("_j", "_w", "_s", "_us", "_ms", "_c", "_hz", "_ghz")
+DEFAULT_UNIT_STRUCTS = ("EnergyReport", "EvalResult", "Telemetry",
+                        "GovernorPolicy", "Result", "SweepResult",
+                        "TraceSpec", "ThermalSpec")
+DEFAULT_UNIT_ALLOW = ("util*", "utilization", "*_idx", "*_count", "num_*",
+                      "*_frac", "*_ratio", "up_threshold", "mix", "seed",
+                      "bins", "repeats", "points", "schema", "kind",
+                      "value", "axes", "telemetry")
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalysisConfig:
+    root: Path
+    paths: Tuple[str, ...] = DEFAULT_PATHS
+    disable: Tuple[str, ...] = ()
+    unit_suffixes: Tuple[str, ...] = DEFAULT_SUFFIXES
+    unit_structs: Tuple[str, ...] = DEFAULT_UNIT_STRUCTS
+    unit_allow: Tuple[str, ...] = DEFAULT_UNIT_ALLOW
+    contracts: str = "src/repro/analysis/contracts.json"
+
+    def enabled_rules(self, select: Optional[List[str]] = None,
+                      ignore: Optional[List[str]] = None) -> Tuple[str, ...]:
+        rules = list(select) if select else [r for r in ALL_RULES
+                                             if r not in self.disable]
+        if ignore:
+            rules = [r for r in rules if r not in ignore]
+        unknown = [r for r in rules if r not in ALL_RULES]
+        if unknown:
+            raise ValueError(f"unknown rule code(s) {unknown}; "
+                             f"known: {list(ALL_RULES)}")
+        return tuple(rules)
+
+
+def _parse_toml(text: str) -> Dict:
+    try:
+        import tomllib                                   # py311+
+        return tomllib.loads(text)
+    except ImportError:
+        pass
+    try:
+        import tomli
+        return tomli.loads(text)
+    except ImportError:
+        return _parse_section(text, "tool.repro.analysis")
+
+
+def _parse_section(text: str, section: str) -> Dict:
+    """Tiny TOML-subset fallback: one named table of scalars/string lists."""
+    table: Dict = {}
+    in_section = False
+    buf = ""
+    for raw in text.splitlines():
+        line = raw.strip()
+        if line.startswith("["):
+            in_section = line == f"[{section}]"
+            continue
+        if not in_section or not line or line.startswith("#"):
+            continue
+        buf += " " + line
+        if buf.count("[") > buf.count("]"):
+            continue                                     # multi-line list
+        m = re.match(r'\s*([\w.-]+)\s*=\s*(.+)$', buf)
+        buf = ""
+        if not m:
+            continue
+        table[m.group(1)] = _parse_value(m.group(2).strip())
+    # re-nest under the dotted section path so both parsers look alike
+    out: Dict = {}
+    node = out
+    for part in section.split("."):
+        node[part] = {}
+        node = node[part]
+    node.update(table)
+    return out
+
+
+def _parse_value(v: str):
+    v = v.split("#", 1)[0].strip() if not v.startswith(("'", '"', "[")) else v
+    if v.startswith("["):
+        inner = v.strip()[1:-1]
+        items = [s.strip() for s in inner.split(",") if s.strip()]
+        return [_parse_value(s) for s in items]
+    if v.startswith(("'", '"')):
+        return v.strip()[1:-1]
+    if v in ("true", "false"):
+        return v == "true"
+    try:
+        return int(v)
+    except ValueError:
+        try:
+            return float(v)
+        except ValueError:
+            return v
+
+
+def find_root(start: Optional[Path] = None) -> Path:
+    """Nearest ancestor holding a ``pyproject.toml`` (else ``start``)."""
+    p = (start or Path.cwd()).resolve()
+    for cand in (p, *p.parents):
+        if (cand / "pyproject.toml").is_file():
+            return cand
+    return p
+
+
+def load_config(root: Optional[Path] = None) -> AnalysisConfig:
+    # an explicit root is authoritative (fixture trees have no pyproject);
+    # otherwise walk up from cwd to the nearest pyproject.toml
+    root = Path(root).resolve() if root is not None else find_root()
+    pyproject = root / "pyproject.toml"
+    block: Dict = {}
+    if pyproject.is_file():
+        data = _parse_toml(pyproject.read_text())
+        block = data.get("tool", {}).get("repro", {}).get("analysis", {})
+
+    def tup(key: str, default: Tuple[str, ...]) -> Tuple[str, ...]:
+        val = block.get(key, block.get(key.replace("-", "_")))
+        return tuple(val) if val is not None else default
+
+    return AnalysisConfig(
+        root=root,
+        paths=tup("paths", DEFAULT_PATHS),
+        disable=tup("disable", ()),
+        unit_suffixes=tup("unit-suffixes", DEFAULT_SUFFIXES),
+        unit_structs=tup("unit-structs", DEFAULT_UNIT_STRUCTS),
+        unit_allow=tup("unit-allow", DEFAULT_UNIT_ALLOW),
+        contracts=str(block.get("contracts",
+                                "src/repro/analysis/contracts.json")),
+    )

@@ -1,0 +1,102 @@
+"""Orchestrator: index → reachability → rules → waivers → report.
+
+The full project index is always built (even under ``--changed``) so that
+cross-module jit reachability and import resolution stay whole-program;
+``only_paths`` then filters which files may *report* findings.  Nothing in
+the audited tree is imported — see :mod:`repro.analysis.project`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import subprocess
+from pathlib import Path
+from typing import List, Optional, Sequence, Tuple
+
+from .config import AnalysisConfig
+from .findings import Finding, apply_waivers, scan_waivers
+from .project import ProjectIndex
+from .reachability import compute_reachable
+from .rules_jax import check_jax_rules
+from .rules_pytree import check_pytree_rules
+from .rules_units import check_unit_rules
+
+
+@dataclasses.dataclass
+class AnalysisReport:
+    findings: List[Finding]
+    rules: Tuple[str, ...]
+    files: List[str]                    # every file indexed
+
+    @property
+    def active(self) -> List[Finding]:
+        return [f for f in self.findings if not f.waived]
+
+    @property
+    def ok(self) -> bool:
+        return not self.active
+
+
+def run_analysis(cfg: AnalysisConfig,
+                 select: Optional[Sequence[str]] = None,
+                 ignore: Optional[Sequence[str]] = None,
+                 only_paths: Optional[Sequence[str]] = None,
+                 strict: bool = False) -> AnalysisReport:
+    rules = cfg.enabled_rules(list(select) if select else None,
+                              list(ignore) if ignore else None)
+    index = ProjectIndex.build(cfg.root, cfg.paths)
+    if only_paths is not None:        # explicit files may sit off cfg.paths
+        for p in only_paths:
+            fp = Path(p) if Path(p).is_absolute() else Path(cfg.root) / p
+            if fp.suffix == ".py" and fp.is_file():
+                index.add_file(fp)
+
+    findings: List[Finding] = []
+    jax_rules = [r for r in rules if r.startswith("JX")]
+    if jax_rules:
+        findings += check_jax_rules(compute_reachable(index), jax_rules)
+    if "PT001" in rules:
+        findings += check_pytree_rules(index)
+    if "UN001" in rules:
+        findings += check_unit_rules(index, cfg)
+
+    if only_paths is not None:
+        keep = {_norm(cfg.root, p) for p in only_paths}
+        findings = [f for f in findings if f.path in keep]
+
+    waivers = {mod.path: w for mod in index.modules.values()
+               if (w := scan_waivers(mod.source))}
+    if only_paths is not None:
+        keep = {_norm(cfg.root, p) for p in only_paths}
+        waivers = {p: w for p, w in waivers.items() if p in keep}
+    findings = apply_waivers(findings, waivers, strict=strict)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    return AnalysisReport(findings=findings, rules=rules,
+                          files=sorted(index.by_path))
+
+
+def _norm(root: Path, path: str) -> str:
+    p = Path(path)
+    if p.is_absolute():
+        try:
+            return p.resolve().relative_to(Path(root).resolve()).as_posix()
+        except ValueError:
+            return p.as_posix()
+    return p.as_posix()
+
+
+def changed_files(root: Path, base: str = "main") -> List[str]:
+    """Python files changed vs ``base`` (plus any uncommitted edits)."""
+    out: set = set()
+    for args in (["git", "diff", "--name-only", f"{base}...HEAD"],
+                 ["git", "diff", "--name-only", "HEAD"],
+                 ["git", "ls-files", "--others", "--exclude-standard"]):
+        try:
+            proc = subprocess.run(args, cwd=root, capture_output=True,
+                                  text=True, check=False)
+        except OSError:
+            continue
+        if proc.returncode != 0:
+            continue
+        out.update(line.strip() for line in proc.stdout.splitlines()
+                   if line.strip().endswith(".py"))
+    return sorted(out)

@@ -1,0 +1,138 @@
+"""Findings + inline waivers for the ``repro.analysis`` lint suite.
+
+A :class:`Finding` is one rule violation pinned to a file/line.  Waivers are
+inline comments that acknowledge a finding instead of fixing it::
+
+    compile_count.inc()   # lint: waive JX003 -- compile counter, trace-only
+
+    # lint: waive UN001 -- ratio, dimensionless by construction
+    offending_line = ...
+
+The first form waives codes on its own line; a standalone waiver comment
+waives the *next* line.  The justification after ``--`` is required in
+``--strict`` runs: a bare waiver raises ``WV001`` so silent suppressions
+cannot accumulate (DESIGN.md §12).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Sequence
+
+REPORT_SCHEMA = "repro.analysis/report/v1"
+
+#: ``# lint: waive JX001[,JX002] [-- justification]``
+WAIVER_RE = re.compile(
+    r"#\s*lint:\s*waive\s+"
+    r"(?P<codes>[A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)"
+    r"\s*(?:--\s*(?P<reason>\S.*?))?\s*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation (or acknowledged waiver) at ``path:line``."""
+    code: str                       # e.g. "JX001"
+    path: str                       # repo-relative file path
+    line: int                       # 1-based
+    message: str
+    col: int = 0
+    waived: bool = False
+    waiver_reason: Optional[str] = None
+
+    def render(self) -> str:
+        tag = " (waived)" if self.waived else ""
+        return f"{self.path}:{self.line}:{self.col}: {self.code}{tag} " \
+               f"{self.message}"
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Waiver:
+    codes: frozenset
+    reason: Optional[str]
+    line: int                       # the waiver comment's own line
+
+
+def scan_waivers(source: str) -> Dict[int, Waiver]:
+    """Map *waived line number* -> :class:`Waiver` for one file.
+
+    A waiver comment trailing code applies to its own line; a comment-only
+    waiver line applies to itself and the following line (so long statements
+    can carry the waiver above them).
+    """
+    out: Dict[int, Waiver] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = WAIVER_RE.search(text)
+        if not m:
+            continue
+        codes = frozenset(c.strip() for c in m.group("codes").split(","))
+        w = Waiver(codes=codes, reason=m.group("reason"), line=i)
+        out[i] = w
+        if text.lstrip().startswith("#"):      # standalone comment line
+            out.setdefault(i + 1, w)
+    return out
+
+
+def apply_waivers(findings: Sequence[Finding],
+                  waivers_by_path: Dict[str, Dict[int, Waiver]],
+                  strict: bool = False) -> List[Finding]:
+    """Mark findings covered by a waiver; in strict mode add ``WV001`` for
+    waivers that carry no ``--`` justification."""
+    out: List[Finding] = []
+    used: set = set()
+    for f in findings:
+        w = waivers_by_path.get(f.path, {}).get(f.line)
+        if w is not None and f.code in w.codes:
+            used.add((f.path, w.line))
+            out.append(dataclasses.replace(f, waived=True,
+                                           waiver_reason=w.reason))
+        else:
+            out.append(f)
+    if strict:
+        for path, waivers in waivers_by_path.items():
+            for w in set(waivers.values()):
+                if w.reason is None:
+                    out.append(Finding(
+                        code="WV001", path=path, line=w.line,
+                        message="waiver without justification; append "
+                                "'-- <why this is safe>'"))
+    return out
+
+
+def active(findings: Sequence[Finding]) -> List[Finding]:
+    """Findings that still gate (not waived)."""
+    return [f for f in findings if not f.waived]
+
+
+def render_report(findings: Sequence[Finding]) -> str:
+    lines = [f.render() for f in sorted(
+        findings, key=lambda f: (f.path, f.line, f.code))]
+    act = active(findings)
+    waived = len(findings) - len(act)
+    lines.append(f"{len(act)} finding(s), {waived} waived")
+    return "\n".join(lines)
+
+
+def report_payload(findings: Sequence[Finding], **extra) -> Dict:
+    """JSON-ready findings report (the CI artifact next to BENCH_*.json)."""
+    per_code: Dict[str, int] = {}
+    for f in active(findings):
+        per_code[f.code] = per_code.get(f.code, 0) + 1
+    payload = {
+        "schema": REPORT_SCHEMA,
+        "findings": [f.to_dict() for f in sorted(
+            findings, key=lambda f: (f.path, f.line, f.code))],
+        "summary": {"active": len(active(findings)),
+                    "waived": len(findings) - len(active(findings)),
+                    "per_code": dict(sorted(per_code.items()))},
+    }
+    payload.update(extra)
+    return payload
+
+
+def dump_report(findings: Sequence[Finding], path: str, **extra) -> None:
+    with open(path, "w") as fh:
+        json.dump(report_payload(findings, **extra), fh, indent=2)

@@ -1,0 +1,208 @@
+"""AST project index — parse once, resolve imports, never import the target.
+
+The lint rules run on syntax trees alone (``ast.parse``), so auditing
+``repro.core.simkernel_jax`` does not execute it (no JAX import, no device
+init).  :class:`ProjectIndex` maps every ``.py`` file under the configured
+paths to a :class:`ModuleInfo` carrying its tree, import aliases resolved to
+dotted module names, top-level functions/classes, and a child->parent node
+map (rules climb it to find the enclosing function of a call site).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    path: str                               # repo-relative, posix
+    module: str                             # dotted name, e.g. repro.core.dvfs
+    tree: ast.Module
+    source: str
+    imports: Dict[str, str]                 # alias -> dotted module
+    from_imports: Dict[str, Tuple[str, str]]  # name -> (module, original)
+    functions: Dict[str, ast.FunctionDef]   # top-level defs
+    classes: Dict[str, ast.ClassDef]        # top-level classes
+    global_names: frozenset                 # module-level assigned names
+    parents: Dict[ast.AST, ast.AST]         # child -> parent
+
+    def enclosing_function(self, node: ast.AST) -> Optional[ast.AST]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+
+def module_name_for(relpath: Path) -> str:
+    """Dotted module name for a repo-relative path (``src`` layout aware)."""
+    parts = list(relpath.with_suffix("").parts)
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _resolve_relative(module: str, level: int, target: Optional[str]) -> str:
+    """Resolve ``from ..x import y`` against the importing module's package."""
+    base = module.split(".")
+    # the module itself is not a package (no __init__ handling needed for
+    # lint purposes): level=1 -> its package, each extra level climbs one
+    base = base[:-level] if level <= len(base) else []
+    if target:
+        base += target.split(".")
+    return ".".join(base)
+
+
+class ProjectIndex:
+    """All parsed modules, addressable by dotted name or path."""
+
+    def __init__(self, root: Path):
+        self.root = Path(root)
+        self.modules: Dict[str, ModuleInfo] = {}
+        self.by_path: Dict[str, ModuleInfo] = {}
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def build(cls, root: Path, paths: Iterable[str],
+              exclude: Tuple[str, ...] = ("tests/fixtures",)) -> \
+            "ProjectIndex":
+        idx = cls(root)
+        for files_root in paths:
+            base = (Path(root) / files_root).resolve()
+            if base.is_file():
+                idx.add_file(base)
+                continue
+            if not base.is_dir():
+                continue
+            for py in sorted(base.rglob("*.py")):
+                rel = py.relative_to(root).as_posix()
+                if any(rel.startswith(e) for e in exclude):
+                    continue
+                idx.add_file(py)
+        return idx
+
+    def add_file(self, path: Path) -> Optional[ModuleInfo]:
+        path = Path(path).resolve()
+        try:
+            rel = path.relative_to(self.root).as_posix()
+        except ValueError:
+            rel = path.as_posix()
+        if rel in self.by_path:
+            return self.by_path[rel]
+        source = path.read_text()
+        try:
+            tree = ast.parse(source, filename=rel)
+        except SyntaxError:
+            return None
+        mod = _build_module(rel, tree, source)
+        self.modules[mod.module] = mod
+        self.by_path[rel] = mod
+        return mod
+
+    # -- resolution ---------------------------------------------------------
+    def resolve_module(self, dotted: str) -> Optional[ModuleInfo]:
+        return self.modules.get(dotted)
+
+    def resolve_function(self, dotted: str) -> \
+            Optional[Tuple[ModuleInfo, ast.FunctionDef]]:
+        """``repro.core.dvfs.ondemand_index`` -> (module, def) if indexed."""
+        if "." not in dotted:
+            return None
+        mod_name, func = dotted.rsplit(".", 1)
+        mod = self.modules.get(mod_name)
+        if mod is not None and func in mod.functions:
+            return mod, mod.functions[func]
+        return None
+
+
+def _build_module(rel: str, tree: ast.Module, source: str) -> ModuleInfo:
+    module = module_name_for(Path(rel))
+    imports: Dict[str, str] = {}
+    from_imports: Dict[str, Tuple[str, str]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                imports[a.asname or a.name.split(".")[0]] = \
+                    a.name if a.asname else a.name.split(".")[0]
+                if a.asname:
+                    imports[a.asname] = a.name
+        elif isinstance(node, ast.ImportFrom):
+            src = node.module or ""
+            if node.level:
+                src = _resolve_relative(module, node.level, node.module)
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                from_imports[a.asname or a.name] = (src, a.name)
+
+    functions = {n.name: n for n in tree.body
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    classes = {n.name: n for n in tree.body if isinstance(n, ast.ClassDef)}
+
+    global_names = set()
+    for n in tree.body:
+        if isinstance(n, ast.Assign):
+            for t in n.targets:
+                if isinstance(t, ast.Name):
+                    global_names.add(t.id)
+        elif isinstance(n, (ast.AnnAssign, ast.AugAssign)) and \
+                isinstance(n.target, ast.Name):
+            global_names.add(n.target.id)
+
+    parents: Dict[ast.AST, ast.AST] = {}
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            parents[child] = parent
+
+    return ModuleInfo(path=rel, module=module, tree=tree, source=source,
+                      imports=imports, from_imports=from_imports,
+                      functions=functions, classes=classes,
+                      global_names=frozenset(global_names), parents=parents)
+
+
+# --------------------------------------------------------------------------
+# Dotted-name resolution of expressions (through the import aliases)
+# --------------------------------------------------------------------------
+
+#: well-known aliases normalised even without seeing the import (defensive:
+#: fixtures and repos conventionally use these spellings)
+_CANON = {"jnp": "jax.numpy", "np": "numpy"}
+
+
+def dotted_name(node: ast.AST, mod: ModuleInfo) -> Optional[str]:
+    """Resolve ``Name``/``Attribute`` chains to a dotted path.
+
+    ``jnp.where`` -> ``jax.numpy.where``; ``_thermal.exact_step_jax`` ->
+    ``repro.core.thermal.exact_step_jax``; ``ondemand_index`` (from-import)
+    -> ``repro.core.dvfs.ondemand_index``; plain local names resolve to
+    ``<module>.<name>`` when the module defines them at top level.
+    """
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if not isinstance(cur, ast.Name):
+        return None
+    head = cur.id
+    parts.reverse()
+    if head in mod.from_imports:
+        src, orig = mod.from_imports[head]
+        base = f"{src}.{orig}" if src else orig
+    elif head in mod.imports:
+        base = mod.imports[head]
+    elif head in mod.functions or head in mod.classes or \
+            head in mod.global_names:
+        base = f"{mod.module}.{head}" if mod.module else head
+    else:
+        base = head
+    first = base.split(".")[0]
+    if first in _CANON:
+        base = ".".join([_CANON[first]] + base.split(".")[1:])
+    return ".".join([base] + parts) if parts else base

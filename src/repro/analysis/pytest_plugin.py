@@ -1,0 +1,58 @@
+"""Pytest hook for the CC001 compile-count gate.
+
+Load with ``-p repro.analysis.pytest_plugin`` (or via the ``pytest11``
+entry point when the package is installed) and point it at the artifacts::
+
+    pytest -p repro.analysis.pytest_plugin \
+        --compile-contracts src/repro/analysis/contracts.json \
+        --compile-bench 'BENCH_*.json'
+
+After the test session the gate runs over every matching ``BENCH_*.json``;
+violations print as lint findings and flip the session exit status to 1, so
+a compile-count regression fails CI even when every test passed.
+"""
+from __future__ import annotations
+
+import glob
+from pathlib import Path
+
+
+def pytest_addoption(parser):
+    group = parser.getgroup("repro.analysis")
+    group.addoption("--compile-contracts", default=None, metavar="PATH",
+                    help="contracts.json for the CC001 compile-count gate")
+    group.addoption("--compile-bench", default="BENCH_*.json",
+                    metavar="GLOB",
+                    help="glob of bench artifacts to gate "
+                         "(default: BENCH_*.json)")
+
+
+def pytest_sessionfinish(session, exitstatus):
+    contracts = session.config.getoption("--compile-contracts")
+    if not contracts:
+        return
+    from .compile_gate import check_compile_gate
+    pattern = session.config.getoption("--compile-bench")
+    bench_paths = sorted(Path(p) for p in glob.glob(pattern))
+    tr = session.config.pluginmanager.get_plugin("terminalreporter")
+
+    def say(line):
+        if tr is not None:
+            tr.write_line(line)
+        else:                                             # pragma: no cover
+            print(line)
+
+    if not bench_paths:
+        say(f"[repro.analysis] CC001: no bench artifacts match "
+            f"{pattern!r}; gate skipped")
+        return
+    findings = check_compile_gate(Path(contracts), bench_paths)
+    if findings:
+        for f in findings:
+            say(f.render())
+        say(f"[repro.analysis] CC001: {len(findings)} compile-count "
+            f"violation(s)")
+        session.exitstatus = 1
+    else:
+        say(f"[repro.analysis] CC001: {len(bench_paths)} bench artifact(s) "
+            f"within contract")

@@ -1,0 +1,190 @@
+"""The jit-reachable set — which code runs under a JAX trace.
+
+Roots are (a) functions decorated with ``jax.jit`` / ``jax.vmap`` /
+``functools.partial(jax.jit, …)`` and (b) callees handed to trace entry
+points anywhere in the project — ``jax.jit(f)``, ``jax.vmap(f)``,
+``lax.scan(f, …)``, ``lax.while_loop(cond, body, …)``, ``lax.cond(p, t, f)``,
+``pallas_call(kernel)`` — including lambdas and defs nested in host code.
+Edges follow plain calls (and ``functools.partial`` wrapping) to top-level
+functions across the indexed modules, so e.g. ``_epoch_scan`` →
+``_window_step`` → ``repro.core.thermal.exact_step_jax`` all land in the set
+rooted at ``@jit _simulate``.  Everything lexically inside a reachable
+function (nested defs, lambdas) traces with it and is scanned as one unit.
+
+``static_param_names`` collects every ``static_argnames`` string seen on a
+jit decorator: rules treat those names as host values (not traced) even in
+transitive callees — a deliberate, documented approximation that keeps
+``if policy == "etf"`` (a compile-time branch) out of JX001.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from .project import ModuleInfo, ProjectIndex, dotted_name
+
+#: canonical dotted name -> positions of traced-callee arguments
+TRACE_ENTRY: Dict[str, Tuple[int, ...]] = {
+    "jax.jit": (0,), "jax.vmap": (0,), "jax.pmap": (0,),
+    "jax.grad": (0,), "jax.value_and_grad": (0,),
+    "jax.checkpoint": (0,), "jax.remat": (0,),
+    "jax.lax.scan": (0,), "jax.lax.map": (0,),
+    "jax.lax.while_loop": (0, 1), "jax.lax.fori_loop": (2,),
+    "jax.lax.cond": (1, 2), "jax.lax.switch": (1,),
+    "jax.lax.associative_scan": (0,),
+    "jax.experimental.pallas.pallas_call": (0,),
+    "jax.experimental.shard_map.shard_map": (0,),
+}
+
+#: decorators that make the decorated function a trace root
+_ROOT_DECORATORS = ("jax.jit", "jax.vmap", "jax.pmap", "jax.checkpoint",
+                    "jax.remat")
+
+FuncNode = ast.AST      # FunctionDef | AsyncFunctionDef | Lambda
+
+
+@dataclasses.dataclass(frozen=True)
+class Unit:
+    """One reachable trace unit: a function whose whole subtree traces."""
+    mod: ModuleInfo
+    node: FuncNode
+    name: str           # display name ("_epoch_scan", "<lambda:L123>")
+
+    def key(self) -> Tuple[str, int]:
+        return (self.mod.path, self.node.lineno)
+
+
+@dataclasses.dataclass
+class ReachableSet:
+    units: List[Unit]
+    static_param_names: frozenset
+
+    def __iter__(self):
+        return iter(self.units)
+
+
+def _display(node: FuncNode) -> str:
+    if isinstance(node, ast.Lambda):
+        return f"<lambda:L{node.lineno}>"
+    return node.name
+
+
+def _static_argnames(call: ast.Call) -> List[str]:
+    out: List[str] = []
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    out.append(n.value)
+    return out
+
+
+def _decorator_roots(fn: ast.AST, mod: ModuleInfo,
+                     static_names: Set[str]) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        dotted = dotted_name(target, mod)
+        if dotted in _ROOT_DECORATORS:
+            if isinstance(dec, ast.Call):
+                static_names.update(_static_argnames(dec))
+            return True
+        if dotted == "functools.partial" and isinstance(dec, ast.Call) \
+                and dec.args:
+            inner = dotted_name(dec.args[0], mod)
+            if inner in _ROOT_DECORATORS:
+                static_names.update(_static_argnames(dec))
+                return True
+    return False
+
+
+def _callee_targets(expr: ast.AST, mod: ModuleInfo,
+                    index: ProjectIndex) -> List[Tuple[ModuleInfo, FuncNode]]:
+    """Resolve a callee expression to concrete function nodes."""
+    if isinstance(expr, ast.Lambda):
+        return [(mod, expr)]
+    if isinstance(expr, (ast.Tuple, ast.List)):        # lax.switch branches
+        out = []
+        for e in expr.elts:
+            out.extend(_callee_targets(e, mod, index))
+        return out
+    if isinstance(expr, ast.Call):                     # functools.partial(f,…)
+        if dotted_name(expr.func, mod) == "functools.partial" and expr.args:
+            return _callee_targets(expr.args[0], mod, index)
+        return []
+    if isinstance(expr, ast.Name):
+        # a def nested in an enclosing function shadows module scope
+        scope = mod.enclosing_function(expr)
+        while scope is not None:
+            for n in ast.walk(scope):
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and n is not scope and n.name == expr.id:
+                    return [(mod, n)]
+            scope = mod.enclosing_function(scope)
+    if isinstance(expr, (ast.Name, ast.Attribute)):
+        dotted = dotted_name(expr, mod)
+        if dotted:
+            hit = index.resolve_function(dotted)
+            if hit is not None:
+                return [(hit[0], hit[1])]
+    return []
+
+
+def _call_edges(unit_node: FuncNode, mod: ModuleInfo,
+                index: ProjectIndex) -> List[Tuple[ModuleInfo, FuncNode]]:
+    """Top-level functions this unit's subtree calls (or partial-wraps)."""
+    out: List[Tuple[ModuleInfo, FuncNode]] = []
+    for node in ast.walk(unit_node):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = dotted_name(node.func, mod)
+        if dotted == "functools.partial" and node.args:
+            out.extend(_callee_targets(node.args[0], mod, index))
+            continue
+        if dotted:
+            hit = index.resolve_function(dotted)
+            if hit is not None:
+                out.append((hit[0], hit[1]))
+    return out
+
+
+def compute_reachable(index: ProjectIndex) -> ReachableSet:
+    static_names: Set[str] = set()
+    roots: List[Tuple[ModuleInfo, FuncNode]] = []
+
+    for mod in index.modules.values():
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and _decorator_roots(node, mod, static_names):
+                roots.append((mod, node))
+            elif isinstance(node, ast.Call):
+                dotted = dotted_name(node.func, mod)
+                positions = TRACE_ENTRY.get(dotted or "")
+                if not positions:
+                    continue
+                if dotted == "jax.jit":
+                    static_names.update(_static_argnames(node))
+                for pos in positions:
+                    if pos < len(node.args):
+                        roots.extend(_callee_targets(node.args[pos], mod,
+                                                     index))
+
+    # BFS over call edges; each unit is scanned whole (nested defs included),
+    # so membership is tracked at unit granularity
+    seen: Set[Tuple[str, int]] = set()
+    units: List[Unit] = []
+    frontier = list(roots)
+    while frontier:
+        mod, node = frontier.pop()
+        unit = Unit(mod=mod, node=node, name=_display(node))
+        if unit.key() in seen:
+            continue
+        seen.add(unit.key())
+        units.append(unit)
+        for tgt_mod, tgt_node in _call_edges(node, mod, index):
+            if (tgt_mod.path, tgt_node.lineno) not in seen:
+                frontier.append((tgt_mod, tgt_node))
+
+    units.sort(key=lambda u: (u.mod.path, u.node.lineno))
+    return ReachableSet(units=units,
+                        static_param_names=frozenset(static_names))

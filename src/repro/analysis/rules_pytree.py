@@ -1,0 +1,161 @@
+"""PT001 — pytree registration contracts.
+
+Every ``jax.tree_util.register_dataclass`` (and ``register_pytree_node``)
+target must be a **frozen** dataclass — sweep lanes hash scenarios and
+tables as jit cache keys, and a mutable pytree silently invalidates them.
+When the ``data_fields`` / ``meta_fields`` split is written as literals it
+must partition the class's annotated fields exactly (a missing field is
+dropped by ``flatten`` → ``unflatten`` round-trips lose state; an
+overlapping or unknown field breaks unflatten), and meta (static/hashable)
+fields must not be arrays — an ndarray meta field defeats hashing and
+retriggers compilation per call.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from .findings import Finding
+from .project import ModuleInfo, ProjectIndex, dotted_name
+
+_REGISTER_DATACLASS = "jax.tree_util.register_dataclass"
+_REGISTER_NODE = ("jax.tree_util.register_pytree_node",
+                  "jax.tree_util.register_pytree_node_class")
+
+
+def _dataclass_frozen(cls: ast.ClassDef, mod: ModuleInfo) -> Optional[bool]:
+    """None: not a dataclass; else the ``frozen=`` flag."""
+    for dec in cls.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if dotted_name(target, mod) != "dataclasses.dataclass":
+            continue
+        if isinstance(dec, ast.Call):
+            for kw in dec.keywords:
+                if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+                    return bool(kw.value.value)
+        return False
+    return None
+
+
+def _annotated_fields(cls: ast.ClassDef) -> List[Tuple[str, str]]:
+    out = []
+    for stmt in cls.body:
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target,
+                                                          ast.Name):
+            if isinstance(stmt.annotation, ast.Constant) or \
+                    "ClassVar" in ast.unparse(stmt.annotation):
+                continue
+            out.append((stmt.target.id, ast.unparse(stmt.annotation)))
+    return out
+
+
+def _literal_strs(node: ast.AST) -> Optional[List[str]]:
+    if not isinstance(node, (ast.List, ast.Tuple)):
+        return None
+    out = []
+    for e in node.elts:
+        if not (isinstance(e, ast.Constant) and isinstance(e.value, str)):
+            return None
+        out.append(e.value)
+    return out
+
+
+def _resolve_classes(expr: ast.AST, mod: ModuleInfo) -> List[ast.ClassDef]:
+    """First argument of a register call -> candidate class defs.
+
+    Handles the direct ``register_dataclass(SimTables, …)`` form and the
+    loop form ``for _cls in (A, B, C): register_dataclass(_cls, …)``.
+    """
+    if not isinstance(expr, ast.Name):
+        return []
+    if expr.id in mod.classes:
+        return [mod.classes[expr.id]]
+    parent = mod.parents.get(expr)
+    while parent is not None:
+        if isinstance(parent, ast.For) and \
+                isinstance(parent.target, ast.Name) and \
+                parent.target.id == expr.id and \
+                isinstance(parent.iter, (ast.Tuple, ast.List)):
+            return [mod.classes[e.id] for e in parent.iter.elts
+                    if isinstance(e, ast.Name) and e.id in mod.classes]
+        parent = mod.parents.get(parent)
+    return []
+
+
+def _is_array_annotation(ann: str) -> bool:
+    return "ndarray" in ann or "Array" in ann
+
+
+def check_pytree_rules(index: ProjectIndex) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in index.modules.values():
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = dotted_name(node.func, mod)
+            if dotted == _REGISTER_DATACLASS:
+                out.extend(_check_register_dataclass(node, mod))
+            elif dotted in _REGISTER_NODE and node.args:
+                for cls in _resolve_classes(node.args[0], mod):
+                    frozen = _dataclass_frozen(cls, mod)
+                    if frozen is not True:
+                        out.append(Finding(
+                            code="PT001", path=mod.path, line=node.lineno,
+                            col=node.col_offset,
+                            message=f"pytree-registered `{cls.name}` must "
+                                    f"be a frozen dataclass (hashable jit "
+                                    f"cache key); found "
+                                    f"{'mutable dataclass' if frozen is False else 'non-dataclass'}"))
+    return out
+
+
+def _check_register_dataclass(node: ast.Call,
+                              mod: ModuleInfo) -> List[Finding]:
+    out: List[Finding] = []
+    if not node.args:
+        return out
+
+    def finding(msg: str, line: Optional[int] = None) -> None:
+        out.append(Finding(code="PT001", path=mod.path,
+                           line=line or node.lineno, col=node.col_offset,
+                           message=msg))
+
+    kwargs = {kw.arg: kw.value for kw in node.keywords}
+    data_node = kwargs.get("data_fields",
+                           node.args[1] if len(node.args) > 1 else None)
+    meta_node = kwargs.get("meta_fields",
+                           node.args[2] if len(node.args) > 2 else None)
+    data = _literal_strs(data_node) if data_node is not None else None
+    meta = _literal_strs(meta_node) if meta_node is not None else None
+
+    for cls in _resolve_classes(node.args[0], mod):
+        frozen = _dataclass_frozen(cls, mod)
+        if frozen is None:
+            finding(f"`register_dataclass({cls.name}, …)` on a "
+                    f"non-dataclass")
+            continue
+        if not frozen:
+            finding(f"pytree-registered dataclass `{cls.name}` must be "
+                    f"frozen=True: sweep lanes hash it as a jit cache key")
+        if data is None or meta is None:
+            continue                     # computed split: frozen check only
+        fields = dict(_annotated_fields(cls))
+        overlap = sorted(set(data) & set(meta))
+        if overlap:
+            finding(f"`{cls.name}` fields {overlap} listed as both data "
+                    f"and meta")
+        missing = sorted(set(fields) - set(data) - set(meta))
+        if missing:
+            finding(f"`{cls.name}` fields {missing} missing from the "
+                    f"data/meta split: flatten() drops them and "
+                    f"unflatten() round-trips lose state")
+        unknown = sorted((set(data) | set(meta)) - set(fields))
+        if unknown:
+            finding(f"`{cls.name}` split names unknown fields {unknown}")
+        for name in meta:
+            ann = fields.get(name)
+            if ann is not None and _is_array_annotation(ann):
+                finding(f"`{cls.name}.{name}` is declared meta (static) "
+                        f"but annotated `{ann}`: array metadata is "
+                        f"unhashable and defeats the jit cache")
+    return out

@@ -1,0 +1,92 @@
+"""UN001 — unit-suffix discipline on result/report structs.
+
+The paper's tables mix microseconds, Joules, Watts, Celsius and GHz; a bare
+``latency`` field is how µs gets averaged into ms.  Every *numeric* field of
+the configured structs (``unit-structs`` in ``[tool.repro.analysis]``), and
+every string key of dict literals built inside their methods (``to_dict``
+payloads feed the run manifests), must either end in an accepted unit
+suffix (``_us``, ``_j``, …) or match a dimensionless allow pattern
+(``util*``, ``*_idx``, ``num_*``, …).  Integer-annotated fields are exempt —
+counts and indices carry no unit.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+import re
+from typing import List, Optional
+
+from .config import AnalysisConfig
+from .findings import Finding
+from .project import ProjectIndex
+
+_NUMERIC_ANN = re.compile(r"\bfloat\b|ndarray|\bArray\b|jnp\.|\bcomplex\b")
+
+
+def _looks_numeric(ann: str) -> bool:
+    return bool(_NUMERIC_ANN.search(ann))
+
+
+def _is_dataclass_like(cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        src = ast.unparse(target)
+        if src.endswith("dataclass") or src.endswith("NamedTuple"):
+            return True
+    return any(isinstance(b, ast.Name) and b.id == "NamedTuple"
+               for b in cls.bases)
+
+
+def _name_ok(name: str, cfg: AnalysisConfig) -> bool:
+    if any(name.endswith(sfx) for sfx in cfg.unit_suffixes):
+        return True
+    return any(fnmatch.fnmatchcase(name, pat) for pat in cfg.unit_allow)
+
+
+def check_unit_rules(index: ProjectIndex,
+                     cfg: AnalysisConfig) -> List[Finding]:
+    out: List[Finding] = []
+    suffixes = ", ".join(cfg.unit_suffixes)
+    for mod in index.modules.values():
+        for cls in mod.classes.values():
+            if cls.name not in cfg.unit_structs:
+                continue
+            if not _is_dataclass_like(cls):
+                continue
+
+            def emit(node: ast.AST, what: str, name: str) -> None:
+                out.append(Finding(
+                    code="UN001", path=mod.path, line=node.lineno,
+                    col=node.col_offset,
+                    message=f"{what} `{name}` on `{cls.name}` lacks a unit "
+                            f"suffix ({suffixes}); rename (e.g. "
+                            f"`{name}_us`) or add an `unit-allow` pattern"))
+
+            for stmt in cls.body:
+                if isinstance(stmt, ast.AnnAssign) and \
+                        isinstance(stmt.target, ast.Name):
+                    ann = ast.unparse(stmt.annotation)
+                    if _looks_numeric(ann) and \
+                            not _name_ok(stmt.target.id, cfg):
+                        emit(stmt, "numeric field", stmt.target.id)
+                elif isinstance(stmt, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    for key_node, key in _dict_keys(stmt):
+                        if not _name_ok(key, cfg):
+                            emit(key_node, f"dict key (in "
+                                           f"`{stmt.name}()`)", key)
+    return out
+
+
+def _dict_keys(fn: ast.AST):
+    """String keys of dict literals / dict(...) calls in a method body."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Dict):
+            for k in node.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    yield k, k.value
+        elif isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Name) and node.func.id == "dict":
+            for kw in node.keywords:
+                if kw.arg is not None:
+                    yield kw, kw.arg

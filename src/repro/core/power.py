@@ -43,7 +43,7 @@ def idle_power(pe: PE) -> float:
 class EnergyReport:
     total_energy_j: float
     energy_per_pe_j: np.ndarray           # (num_pes,)
-    busy_us_per_pe: np.ndarray            # (num_pes,)
+    busy_per_pe_us: np.ndarray            # (num_pes,)
     avg_power_w: float
     makespan_us: float
 

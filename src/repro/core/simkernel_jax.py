@@ -493,7 +493,7 @@ def _simulate(tables: SimTables, policy: str, num_jobs: int,
         # OPP — the static kernel would return plausible but wrong numbers
         raise ValueError("tables were built for a dynamic governor; run "
                          "them through simulate_jax_dtpm (DESIGN.md §7)")
-    _COMPILES_STATIC.inc()                 # python body runs only on trace
+    _COMPILES_STATIC.inc()  # lint: waive JX003 -- deliberate: counts compiles, python body runs per trace
     return _epoch_scan(tables, policy, num_jobs, arrival, app_idx, None)
 
 
@@ -504,7 +504,7 @@ def _simulate_dtpm(tables: SimTables, policy: str, num_jobs: int,
     if tables.exec_opp is None:
         raise ValueError("tables lack OPP ladders; build them with the "
                          "dynamic governor (build_tables(governor=...))")
-    _COMPILES_DTPM.inc()                   # python body runs only on trace
+    _COMPILES_DTPM.inc()  # lint: waive JX003 -- deliberate: counts compiles, python body runs per trace
     return _epoch_scan(tables, policy, num_jobs, arrival, app_idx, gov)
 
 
@@ -562,7 +562,7 @@ def _telemetry_scan_dtpm(tables: SimTables, gov: GovernorPolicy,
                          num_windows: int):
     """(W, …) ys of the DTPM window carry: OPP index, utilisation, node
     power and RC temperatures per sampling window."""
-    _COMPILES_TELEMETRY.inc()              # python body runs only on trace
+    _COMPILES_TELEMETRY.inc()  # lint: waive JX003 -- deliberate: counts compiles, python body runs per trace
     valid_j = tables.valid[app_idx]
     C = tables.opp_freq.shape[0]
     window = jnp.asarray(gov.sample_window_us, jnp.float32)
@@ -594,7 +594,7 @@ def _telemetry_scan_static(tables: SimTables, app_idx, scheduled, start,
     fixed OPP (frequency columns are filled by the caller — they are
     constants of the governor, not of the schedule).  The RC network
     integrates in real time (dt = window)."""
-    _COMPILES_TELEMETRY.inc()              # python body runs only on trace
+    _COMPILES_TELEMETRY.inc()  # lint: waive JX003 -- deliberate: counts compiles, python body runs per trace
     valid_j = tables.valid[app_idx]
     P = tables.num_pes
     C = num_domains

@@ -36,9 +36,9 @@ class EvalResult:
     avg_latency_us: np.ndarray        # (D,) mean over traces
     energy_j: np.ndarray              # (D,) mean over traces
     peak_temp_c: np.ndarray           # (D,) max over traces
-    latency_per_trace: np.ndarray     # (D, S)
-    energy_per_trace: np.ndarray      # (D, S)
-    temp_per_trace: np.ndarray        # (D, S)
+    latency_per_trace_us: np.ndarray     # (D, S)
+    energy_per_trace_j: np.ndarray      # (D, S)
+    temp_per_trace_c: np.ndarray        # (D, S)
 
     @property
     def num_designs(self) -> int:
@@ -59,11 +59,11 @@ def _concat(a: "EvalResult", b: "EvalResult") -> "EvalResult":
         avg_latency_us=np.concatenate([a.avg_latency_us, b.avg_latency_us]),
         energy_j=np.concatenate([a.energy_j, b.energy_j]),
         peak_temp_c=np.concatenate([a.peak_temp_c, b.peak_temp_c]),
-        latency_per_trace=np.concatenate([a.latency_per_trace,
-                                          b.latency_per_trace]),
-        energy_per_trace=np.concatenate([a.energy_per_trace,
-                                         b.energy_per_trace]),
-        temp_per_trace=np.concatenate([a.temp_per_trace, b.temp_per_trace]))
+        latency_per_trace_us=np.concatenate([a.latency_per_trace_us,
+                                          b.latency_per_trace_us]),
+        energy_per_trace_j=np.concatenate([a.energy_per_trace_j,
+                                         b.energy_per_trace_j]),
+        temp_per_trace_c=np.concatenate([a.temp_per_trace_c, b.temp_per_trace_c]))
 
 
 def evaluate(points: Sequence[DesignPoint], apps: Sequence[Application],
@@ -127,8 +127,8 @@ def evaluate(points: Sequence[DesignPoint], apps: Sequence[Application],
                       avg_latency_us=lat.mean(axis=1),
                       energy_j=energy.mean(axis=1),
                       peak_temp_c=temps.max(axis=1),
-                      latency_per_trace=lat, energy_per_trace=energy,
-                      temp_per_trace=temps)
+                      latency_per_trace_us=lat, energy_per_trace_j=energy,
+                      temp_per_trace_c=temps)
 
 
 def successive_halving(points: Sequence[DesignPoint],

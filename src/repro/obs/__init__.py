@@ -29,6 +29,7 @@ _LAZY = {
     "write_chrome_trace": "trace",
     "validate_chrome_trace": "trace",
     "bench_cli": "bench",
+    "scaled": "bench",
 }
 
 

@@ -6,10 +6,18 @@ it prints the CSV rows, and under ``--json`` writes a schema-tagged payload
 ``{"manifest": <run manifest>, "rows": [...]}`` so every ``BENCH_*.json``
 is self-describing (scenario hashes, device platform, jit compile counts,
 wall time).  ``python -m repro.obs.report BENCH_x.json`` renders these.
+
+``--smoke`` asks the benchmark for scaled-down inputs: a ``run(smoke=...)``
+signature receives the flag and picks sizes via :func:`scaled`.  Compile
+*counts* are size-independent (jit keys on static argnames and shapes held
+fixed within a run), so the CC001 compile-count gate
+(``python -m repro.analysis --compile-gate``) runs on smoke artifacts and
+still guards the full-size benchmarks.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -20,33 +28,49 @@ BENCH_SCHEMA = "repro.obs/bench/v1"
 Rows = List[Tuple[str, float, str]]
 
 
-def rows_payload(rows: Rows, name: str, wall_s: float) -> dict:
+def scaled(full, smoke_value, smoke: bool):
+    """Pick the benchmark input size: ``full`` normally, ``smoke_value``
+    under ``--smoke`` (the fast CI lane feeding the compile-count gate)."""
+    return smoke_value if smoke else full
+
+
+def rows_payload(rows: Rows, name: str, wall_s: float, **extra) -> dict:
     """The ``BENCH_*.json`` payload: run manifest + measurement rows."""
     return {
         "schema": BENCH_SCHEMA,
-        "manifest": metrics.run_manifest(bench=name, wall_s=wall_s),
+        "manifest": metrics.run_manifest(bench=name, wall_s=wall_s, **extra),
         "rows": [dict(name=n, value=float(v), derived=str(d))
                  for n, v, d in rows],
     }
 
 
-def bench_cli(run_fn: Callable[[], Rows], name: str,
+def bench_cli(run_fn: Callable[..., Rows], name: str,
               description: Optional[str] = None,
               argv: Optional[Sequence[str]] = None) -> int:
     """Run one benchmark module as a CLI: print the CSV rows, honour the
-    ``--json PATH`` flag (the CI perf artifact)."""
+    ``--json PATH`` and ``--smoke`` flags (the CI perf artifact lane)."""
     ap = argparse.ArgumentParser(description=description)
     ap.add_argument("--json", metavar="PATH",
                     help="also dump rows + run manifest as JSON "
                          "(CI perf artifact)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled-down inputs: fast lane for the CC001 "
+                         "compile-count gate")
     args = ap.parse_args(argv)
+    kwargs = {}
+    try:
+        if "smoke" in inspect.signature(run_fn).parameters:
+            kwargs["smoke"] = args.smoke
+    except (TypeError, ValueError):                     # pragma: no cover
+        pass
     wall = metrics.timer(f"bench.{name}.wall")
     with wall:
-        rows = run_fn()
+        rows = run_fn(**kwargs)
     print("name,value,derived")
     for n, v, d in rows:
         print(f"{n},{v:.4f},{d}")
     if args.json:
         with open(args.json, "w") as fh:
-            json.dump(rows_payload(rows, name, wall.last_s), fh, indent=2)
+            json.dump(rows_payload(rows, name, wall.last_s,
+                                   smoke=args.smoke), fh, indent=2)
     return 0

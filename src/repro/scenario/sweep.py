@@ -122,7 +122,7 @@ def _lane_trace(scn: Scenario, names: Sequence[str],
 def _sweep_grid(tables, node_of_pe, arrival, app_idx, policy, num_jobs,
                 bins, repeats):
     """Schedule simulation + thermal scan for (D, S) lanes, ONE program."""
-    compile_count.inc()                    # python body runs only on trace
+    compile_count.inc()  # lint: waive JX003 -- deliberate: counts compiles, python body runs per trace
     out = _simulate_grid(tables, policy, num_jobs, arrival, app_idx)
     temps = peak_temperature_grid(out, node_of_pe, tables.power_active,
                                   tables.power_idle, bins=bins,
@@ -135,7 +135,7 @@ def _sweep_grid_dtpm(tables, gov, arrival, app_idx, policy, num_jobs):
     """Closed-loop DTPM lanes: (D designs, G policies, S traces) in ONE
     program.  Peak temperature comes from the kernel's inline RC loop (the
     one the throttle feedback integrates), so no post-hoc thermal scan."""
-    compile_count.inc()                    # python body runs only on trace
+    compile_count.inc()  # lint: waive JX003 -- deliberate: counts compiles, python body runs per trace
     per_trace = jax.vmap(
         lambda tb, g, a, i: _simulate_dtpm(tb, policy, num_jobs, a, i, g),
         in_axes=(None, None, 0, 0))

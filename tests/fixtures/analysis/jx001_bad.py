@@ -1,0 +1,30 @@
+"""JX001 fixtures — tracer leaks inside jit-reachable code (all bad)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def leak_item(x):
+    return x.item()                    # line 8: JX001 .item()
+
+
+@jax.jit
+def leak_cast(x):
+    return float(x)                    # line 13: JX001 float()
+
+
+@jax.jit
+def leak_branch(x):
+    if jnp.max(x) > 0:                 # line 18: JX001 if on array expr
+        return x
+    return -x
+
+
+def body(carry, x):
+    while jnp.sum(carry) < 10:         # line 24: JX001 while on array expr
+        carry = carry + x
+    return carry, x
+
+
+def scan_it(xs):
+    return jax.lax.scan(body, jnp.zeros(()), xs)

@@ -1,0 +1,30 @@
+"""JX001 fixtures — tracer-safe idioms that must stay clean."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("policy",))
+def static_branch(x, policy: str):
+    if policy == "etf":                # static argname: compile-time branch
+        return jnp.sort(x)
+    return x
+
+
+@jax.jit
+def shape_math(x):
+    n = int(x.shape[0] * 2)            # shape is static metadata
+    return jnp.pad(x, (0, n - len(x)))
+
+
+@jax.jit
+def constant_fold(x):
+    scale = float(np.pi / 2)           # host float on constants, no tracer
+    return x * scale
+
+
+def host_driver(xs):
+    out = jax.jit(shape_math)(xs)
+    return float(np.mean(np.asarray(out)))   # host side: not jit-reachable

@@ -1,0 +1,13 @@
+"""JX002 fixtures — host numpy on traced data inside jit (bad + waiver)."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def host_mean(x):
+    return np.mean(x)                  # line 8: JX002 np on traced arg
+
+
+@jax.jit
+def waived_mean(x):
+    return np.mean(x)  # lint: waive JX002 -- fixture: demonstrates waiver

@@ -1,0 +1,37 @@
+"""JX003 fixtures — impure jitted bodies (all bad)."""
+import random
+import time
+
+import jax
+
+CALLS = []
+
+
+@jax.jit
+def noisy(x):
+    print("tracing", x)                # line 12: JX003 print
+    return x
+
+
+@jax.jit
+def clocked(x):
+    t0 = time.perf_counter()           # line 18: JX003 wall clock
+    return x + t0
+
+
+@jax.jit
+def seeded(x):
+    return x + random.random()         # line 24: JX003 host RNG
+
+
+@jax.jit
+def appends(x):
+    CALLS.append(1)                    # line 29: JX003 global mutation
+    return x
+
+
+class Model:
+    @jax.jit
+    def step(self, x):
+        self.count = 1                 # line 36: JX003 self mutation
+        return x

@@ -1,0 +1,25 @@
+"""JX003 fixtures — effects on the host side of the jit boundary (clean)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+COMPILES = []
+
+
+@jax.jit
+def pure_step(x):
+    jax.debug.print("x={x}", x=x)      # the sanctioned per-call print
+    return jnp.tanh(x)
+
+
+@jax.jit
+def counted(x):
+    COMPILES.append(1)  # lint: waive JX003 -- fixture: compile counter idiom
+    return x
+
+
+def timed_host_call(x):
+    t0 = time.perf_counter()           # host code: not jit-reachable
+    y = pure_step(x)
+    return y, time.perf_counter() - t0

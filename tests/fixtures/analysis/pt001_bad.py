@@ -1,0 +1,34 @@
+"""PT001 fixtures — broken pytree registrations (all bad)."""
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass                         # not frozen
+class Mutable:
+    x: np.ndarray
+
+
+jax.tree_util.register_dataclass(Mutable, data_fields=["x"],
+                                 meta_fields=[])          # line 13: PT001
+
+
+@dataclasses.dataclass(frozen=True)
+class Dropped:
+    x: np.ndarray
+    y: np.ndarray
+
+
+jax.tree_util.register_dataclass(Dropped, data_fields=["x"],
+                                 meta_fields=[])          # line 23: PT001 y
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayMeta:
+    x: np.ndarray
+    lut: np.ndarray
+
+
+jax.tree_util.register_dataclass(ArrayMeta, data_fields=["x"],
+                                 meta_fields=["lut"])     # line 33: PT001

@@ -1,0 +1,34 @@
+"""PT001 fixtures — well-formed pytree registrations (clean)."""
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Tables:
+    exec_us: np.ndarray
+    power_w: np.ndarray
+    num_pes: int
+
+
+jax.tree_util.register_dataclass(Tables, data_fields=["exec_us", "power_w"],
+                                 meta_fields=["num_pes"])
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecA:
+    rate: float
+    seed: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecB:
+    cap: float
+
+
+# loop registration with a computed split: frozen check still applies
+for _cls in (SpecA, SpecB):
+    jax.tree_util.register_dataclass(
+        _cls, data_fields=[],
+        meta_fields=[f.name for f in dataclasses.fields(_cls)])

@@ -1,0 +1,16 @@
+"""UN001 fixtures — unit-less numeric fields on a result struct (bad)."""
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalResult:
+    latency: np.ndarray                # line 9: UN001 no unit suffix
+    energy_j: np.ndarray
+    temperature: float                 # line 11: UN001 no unit suffix
+    num_designs: int                   # int: exempt
+
+    def to_dict(self):
+        return {"latency": 0.0,        # line 15: UN001 payload key
+                "energy_j": 0.0}

@@ -1,0 +1,8 @@
+"""WV001 fixture — a waiver with no justification (strict-mode finding)."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def f(x):
+    return np.mean(x)  # lint: waive JX002

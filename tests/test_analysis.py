@@ -1,0 +1,271 @@
+"""repro.analysis — the lint suite linted by its own fixtures.
+
+Every rule has at least one fixture file that must trip it (with exact
+codes and line numbers) and one that must stay clean; the CC001 gate is
+exercised against synthetic bench artifacts, including a deliberate
+contract violation.  A final dogfood test pins the repo itself to
+``--strict`` clean, so CI cannot drift from the lint contract.
+"""
+import json
+import types
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (check_compile_gate, load_config, run_analysis)
+from repro.analysis.config import AnalysisConfig
+from repro.analysis.engine import changed_files
+from repro.analysis.findings import scan_waivers
+from repro.analysis.__main__ import main as cli_main
+
+FIXTURES = Path(__file__).parent / "fixtures" / "analysis"
+REPO = Path(__file__).parent.parent
+
+
+def lint(*files, strict=False, select=None):
+    cfg = AnalysisConfig(root=FIXTURES, paths=tuple(files))
+    return run_analysis(cfg, select=select, strict=strict)
+
+
+def lines(findings, code=None):
+    return sorted(f.line for f in findings
+                  if code is None or f.code == code)
+
+
+# ---------------------------------------------------------------- JX001
+
+def test_jx001_bad_exact_sites():
+    rep = lint("jx001_bad.py", select=["JX001"])
+    assert lines(rep.active, "JX001") == [8, 13, 18, 24]
+
+
+def test_jx001_good_is_clean():
+    rep = lint("jx001_good.py", select=["JX001"])
+    assert rep.active == []
+
+
+# ---------------------------------------------------------------- JX002
+
+def test_jx002_bad_flags_and_waives():
+    rep = lint("jx002_bad.py", select=["JX002"])
+    assert lines(rep.active, "JX002") == [8]
+    waived = [f for f in rep.findings if f.waived]
+    assert lines(waived, "JX002") == [13]
+    assert waived[0].waiver_reason.startswith("fixture:")
+
+
+def test_jx002_good_side_of_boundary():
+    # jx001_good has host numpy on constants + host driver code: clean
+    rep = lint("jx001_good.py", select=["JX002"])
+    assert rep.active == []
+
+
+# ---------------------------------------------------------------- JX003
+
+def test_jx003_bad_exact_sites():
+    rep = lint("jx003_bad.py", select=["JX003"])
+    assert lines(rep.active, "JX003") == [12, 18, 24, 29, 36]
+
+
+def test_jx003_good_host_effects_and_waiver():
+    rep = lint("jx003_good.py", select=["JX003"])
+    assert rep.active == []
+    assert lines([f for f in rep.findings if f.waived], "JX003") == [18]
+
+
+# ---------------------------------------------------------------- PT001
+
+def test_pt001_bad_exact_sites():
+    rep = lint("pt001_bad.py", select=["PT001"])
+    got = lines(rep.active, "PT001")
+    assert got == [13, 23, 33]
+    msgs = {f.line: f.message for f in rep.active}
+    assert "frozen" in msgs[13]
+    assert "missing" in msgs[23]
+    assert "meta" in msgs[33]
+
+
+def test_pt001_good_including_loop_registration():
+    rep = lint("pt001_good.py", select=["PT001"])
+    assert rep.active == []
+
+
+# ---------------------------------------------------------------- UN001
+
+def test_un001_bad_fields_and_payload_keys():
+    rep = lint("un001_bad.py", select=["UN001"])
+    assert lines(rep.active, "UN001") == [9, 11, 15]
+
+
+def test_un001_good_suffixes_and_allowlist():
+    rep = lint("un001_good.py", select=["UN001"])
+    assert rep.active == []
+
+
+# ---------------------------------------------------------------- waivers
+
+def test_waiver_scanning_forms():
+    src = ("x = 1  # lint: waive JX001 -- same line\n"
+           "# lint: waive UN001,PT001 -- next line\n"
+           "y = 2\n")
+    w = scan_waivers(src)
+    assert w[1].codes == {"JX001"}
+    assert w[2].codes == w[3].codes == {"UN001", "PT001"}
+    assert w[3].reason == "next line"
+
+
+def test_wv001_only_in_strict():
+    rep = lint("wv001_bad.py", select=["JX002"])
+    assert rep.active == []                      # waiver applies
+    rep = lint("wv001_bad.py", select=["JX002"], strict=True)
+    assert [f.code for f in rep.active] == ["WV001"]
+
+
+# ---------------------------------------------------------------- CC001
+
+def _bench_payload(bench, counters):
+    return {"schema": "repro.obs/bench/v1",
+            "manifest": {"bench": bench,
+                         "metrics": {"counters": counters}},
+            "rows": []}
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return p
+
+
+def test_cc001_within_contract(tmp_path):
+    contracts = REPO / "src" / "repro" / "analysis" / "contracts.json"
+    art = _write(tmp_path, "BENCH_speedup.json", _bench_payload(
+        "speedup", {"kernel.jax.simulate.compile_count": 1,
+                    "scenario.sweep.compile_count": 1}))
+    assert check_compile_gate(contracts, [art]) == []
+
+
+def test_cc001_deliberate_violation_fails_gate(tmp_path):
+    # the checked-in contract allows 1 sweep compile for bench speedup; a
+    # regressed jit cache key would recompile per call — the gate must trip
+    contracts = REPO / "src" / "repro" / "analysis" / "contracts.json"
+    art = _write(tmp_path, "BENCH_speedup.json", _bench_payload(
+        "speedup", {"scenario.sweep.compile_count": 64}))
+    findings = check_compile_gate(contracts, [art])
+    assert len(findings) == 1
+    assert findings[0].code == "CC001"
+    assert "scenario.sweep.compile_count" in findings[0].message
+
+
+def test_cc001_patched_contract_tightens(tmp_path):
+    patched = _write(tmp_path, "contracts.json", {
+        "schema": "repro.analysis/contracts/v1",
+        "contracts": {"speedup": {"scenario.sweep.compile_count": 0}}})
+    art = _write(tmp_path, "BENCH_speedup.json", _bench_payload(
+        "speedup", {"scenario.sweep.compile_count": 1}))
+    findings = check_compile_gate(patched, [art])
+    assert [f.code for f in findings] == ["CC001"]
+
+
+def test_cc001_unknown_bench_and_stray_counter(tmp_path):
+    patched = _write(tmp_path, "contracts.json", {
+        "schema": "repro.analysis/contracts/v1",
+        "contracts": {"speedup": {}}})
+    unknown = _write(tmp_path, "BENCH_new.json",
+                     _bench_payload("brand_new", {}))
+    stray = _write(tmp_path, "BENCH_speedup.json", _bench_payload(
+        "speedup", {"scenario.sweep.compile_count": 2}))
+    msgs = [f.message for f in check_compile_gate(patched, [unknown, stray])]
+    assert any("no compile-count contract" in m for m in msgs)
+    assert any("not in the contract" in m for m in msgs)
+
+
+def test_cc001_pytest_plugin_flips_exit_status(tmp_path, monkeypatch):
+    from repro.analysis import pytest_plugin
+    patched = _write(tmp_path, "contracts.json", {
+        "schema": "repro.analysis/contracts/v1",
+        "contracts": {"speedup": {"scenario.sweep.compile_count": 0}}})
+    _write(tmp_path, "BENCH_speedup.json", _bench_payload(
+        "speedup", {"scenario.sweep.compile_count": 3}))
+    monkeypatch.chdir(tmp_path)
+
+    class _Config:
+        def __init__(self):
+            self.pluginmanager = types.SimpleNamespace(
+                get_plugin=lambda name: None)
+
+        def getoption(self, name):
+            return {"--compile-contracts": str(patched),
+                    "--compile-bench": "BENCH_*.json"}[name]
+
+    session = types.SimpleNamespace(config=_Config(), exitstatus=0)
+    pytest_plugin.pytest_sessionfinish(session, 0)
+    assert session.exitstatus == 1
+
+
+# ---------------------------------------------------------------- CLI
+
+def test_cli_list_rules(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for code in ("JX001", "JX002", "JX003", "PT001", "UN001", "CC001"):
+        assert code in out
+
+
+def test_cli_exit_codes_and_report(tmp_path, capsys):
+    report = tmp_path / "findings.json"
+    rc = cli_main(["--root", str(FIXTURES), "--select", "JX001",
+                   "--report", str(report), "jx001_bad.py"])
+    assert rc == 1
+    payload = json.loads(report.read_text())
+    assert payload["schema"] == "repro.analysis/report/v1"
+    assert payload["summary"]["per_code"]["JX001"] == 4
+    rc = cli_main(["--root", str(FIXTURES), "--select", "JX001",
+                   "jx001_good.py"])
+    assert rc == 0
+
+
+def test_cli_unknown_rule_is_usage_error(capsys):
+    assert cli_main(["--select", "ZZ999"]) == 2
+
+
+def test_cli_compile_gate(tmp_path, capsys):
+    art = _write(tmp_path, "BENCH_speedup.json", _bench_payload(
+        "speedup", {"scenario.sweep.compile_count": 99}))
+    rc = cli_main(["--compile-gate", str(art)])
+    assert rc == 1
+    rc = cli_main(["--compile-gate", str(_write(
+        tmp_path, "ok.json", _bench_payload(
+            "speedup", {"scenario.sweep.compile_count": 1})))])
+    assert rc == 0
+
+
+def test_changed_files_runs(tmp_path):
+    # no git in tmp_path: must degrade to an empty list, not raise
+    assert changed_files(tmp_path) == []
+    assert isinstance(changed_files(REPO), list)
+
+
+# ---------------------------------------------------------------- dogfood
+
+def test_repo_is_strict_clean():
+    cfg = load_config(REPO)
+    rep = run_analysis(cfg, ignore=["CC001"], strict=True)
+    assert rep.active == [], "\n".join(f.render() for f in rep.active)
+    # the deliberate compile-counter waivers stay visible, not silenced
+    waived = [f for f in rep.findings if f.waived and f.code == "JX003"]
+    assert len(waived) >= 6
+    assert all(f.waiver_reason for f in waived)
+
+
+def test_repo_reachability_covers_kernels():
+    from repro.analysis.project import ProjectIndex
+    from repro.analysis.reachability import compute_reachable
+    cfg = load_config(REPO)
+    idx = ProjectIndex.build(cfg.root, cfg.paths)
+    reach = compute_reachable(idx)
+    names = {u.name for u in reach}
+    # jit roots and their transitive callees, across modules
+    for expected in ("_simulate", "_simulate_dtpm", "_sweep_grid",
+                     "_epoch_scan", "exact_step_jax"):
+        assert expected in names, sorted(names)
+    assert {"policy", "num_jobs"} <= set(reach.static_param_names)

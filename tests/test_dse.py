@@ -227,7 +227,7 @@ def test_evaluate_shapes_and_front():
     pts = space.sample_lhs(8, seed=1)
     res = evaluate(pts, _apps(), _traces(2))
     assert res.objectives().shape == (8, 3)
-    assert res.latency_per_trace.shape == (8, 2)
+    assert res.latency_per_trace_us.shape == (8, 2)
     mask = res.front_mask()
     assert mask.any() and mask.shape == (8,)
 

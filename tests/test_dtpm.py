@@ -325,7 +325,7 @@ def test_dynamic_governor_respects_design_freq_caps():
     # dse.evaluate's capped batch matches the facade numbers
     ev = evaluate([point], [wifi_tx()], [scn.job_trace()],
                   governor="ondemand")
-    assert ev.latency_per_trace[0, 0] == res.avg_latency_us
+    assert ev.latency_per_trace_us[0, 0] == res.avg_latency_us
 
 
 def test_sweep_rejects_mismatched_design_batch_kind():

@@ -283,10 +283,10 @@ def test_dse_evaluate_equals_sweep():
     ev = dse.evaluate(points, MIX.applications(), traces, policy="etf")
     sr = sweep(MIX.replace(governor="design"),
                axes={"design": points, "seed": [0, 1, 2]})
-    np.testing.assert_array_equal(ev.latency_per_trace,
+    np.testing.assert_array_equal(ev.latency_per_trace_us,
                                   sr.avg_latency_us)
-    np.testing.assert_array_equal(ev.energy_per_trace, sr.energy_j)
-    np.testing.assert_array_equal(ev.temp_per_trace, sr.peak_temp_c)
+    np.testing.assert_array_equal(ev.energy_per_trace_j, sr.energy_j)
+    np.testing.assert_array_equal(ev.temp_per_trace_c, sr.peak_temp_c)
 
 
 def test_sweep_iter_records():
