@@ -1,0 +1,60 @@
+"""``--devices N`` — virtual host device count for benchmark runs.
+
+XLA fixes the CPU device count when the backend initialises, which happens
+on first ``jax`` use; ``--xla_force_host_platform_device_count`` is read
+from ``XLA_FLAGS`` at that moment and never again.  So the flag MUST be
+applied before the first ``import jax`` anywhere in the process — which is
+why every benchmark module calls :func:`apply_devices_flag` at the very top
+of its import list, before any ``repro`` import pulls JAX in, and why this
+module itself must stay stdlib-only.
+
+``python -m benchmarks.bench_<name> --devices 8`` then runs the benchmark
+with 8 virtual CPU devices (the sharded-sweep lane mesh, DESIGN.md §13).
+The default is 1 so all historical BENCH numbers stay comparable.
+``repro.obs.bench.bench_cli`` declares the same flag for ``--help`` and
+argument validation; this shim only peeks at ``sys.argv``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Optional, Sequence
+
+
+def parse_devices(argv: Sequence[str]) -> int:
+    """The value of ``--devices N`` / ``--devices=N`` in ``argv`` (1 when
+    absent).  Malformed values are left for argparse to reject later."""
+    for i, arg in enumerate(argv):
+        if arg == "--devices" and i + 1 < len(argv):
+            val = argv[i + 1]
+        elif arg.startswith("--devices="):
+            val = arg.split("=", 1)[1]
+        else:
+            continue
+        try:
+            return max(1, int(val))
+        except ValueError:
+            return 1
+    return 1
+
+
+def apply_devices_flag(argv: Optional[Sequence[str]] = None) -> int:
+    """Apply ``--devices N`` to ``XLA_FLAGS`` (idempotent); returns N.
+
+    Must run before the first ``jax`` import: raises if JAX is already in
+    ``sys.modules`` and more than one device was requested, instead of
+    silently benchmarking on one device.
+    """
+    n = parse_devices(sys.argv[1:] if argv is None else argv)
+    if n > 1:
+        if "jax" in sys.modules:
+            raise RuntimeError(
+                "--devices must be applied before the first jax import: "
+                "the XLA host device count is fixed at backend init. "
+                "Call benchmarks._devices.apply_devices_flag() at the top "
+                "of the benchmark module, before any repro import.")
+        flag = f"--xla_force_host_platform_device_count={n}"
+        prev = os.environ.get("XLA_FLAGS", "")
+        if flag not in prev:
+            os.environ["XLA_FLAGS"] = f"{prev} {flag}".strip()
+    return n

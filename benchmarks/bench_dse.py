@@ -2,6 +2,10 @@
 vs a per-design ``run()`` loop — the scale story the dse subsystem exists
 for.  Both sides are declared through one ``Scenario``; both include the
 fused RC thermal co-simulation."""
+from ._devices import apply_devices_flag
+
+apply_devices_flag()  # --devices N: sets XLA_FLAGS before the first jax use
+
 from repro.dse import DesignSpace, build_design_batch, evaluate
 from repro.obs import bench_cli, scaled, timer
 from repro.scenario import Scenario, TraceSpec, run as run_scenario, sweep

@@ -12,6 +12,10 @@ optionally dumps the rows + run manifest as JSON (the CI perf artifact).
 """
 from __future__ import annotations
 
+from ._devices import apply_devices_flag
+
+apply_devices_flag()  # --devices N: sets XLA_FLAGS before the first jax use
+
 import dataclasses
 
 from repro.obs import bench_cli, scaled, timer

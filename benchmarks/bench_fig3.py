@@ -4,6 +4,10 @@ MET / ETF / ILP-table schedulers on the Table-2 SoC (WiFi-TX workload).
 All work is declared through one ``Scenario``; the rate × seed grid per
 scheduler is a single ``sweep(..., backend="ref")``.
 """
+from ._devices import apply_devices_flag
+
+apply_devices_flag()  # --devices N: sets XLA_FLAGS before the first jax use
+
 from repro.obs import bench_cli, scaled, timer
 from repro.scenario import Scenario, TraceSpec, sweep
 

@@ -3,6 +3,10 @@
 Requires ``experiments/dryrun/*.json`` (run ``python -m repro.launch.dryrun
 --all --both-meshes`` first); cells without artifacts are reported as absent.
 """
+from ._devices import apply_devices_flag
+
+apply_devices_flag()  # --devices N: sets XLA_FLAGS before the first jax use
+
 from repro.configs import ARCHITECTURES, SHAPES
 from repro.launch.roofline import cell_terms, load_cell
 from repro.obs import bench_cli

@@ -1,0 +1,102 @@
+"""Sharded + chunked sweep execution (DESIGN.md §13): one design-lane grid
+run three ways — single-device baseline, lanes sharded across the local
+devices (``sweep(..., shard=True)``), and lanes streamed through one
+compiled program in fixed-shape chunks (``sweep(..., chunk=N)``).
+
+Run with ``--devices 8`` to put 8 virtual CPU devices behind the lane mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``, applied by the
+pre-import shim).  Virtual CPU devices partition XLA's *programs*, not the
+host's cores: on a 1-core host the sharded lanes still time-share the same
+core, so the ``shard/speedup_*`` rows measure partitioning overhead there,
+not parallel speedup — the ``shard/host_cpus`` row records the physical
+ceiling next to the numbers.  The rows that matter everywhere are the
+equality row (sharded/chunked results are bit-for-bit equal to the
+baseline) and the compile counters feeding the CC001 gate (chunking and
+sharding must not add compiles per policy shape).
+"""
+from ._devices import apply_devices_flag
+
+DEVICES = apply_devices_flag()  # must precede the repro imports (jax)
+
+import os
+
+import numpy as np
+
+from repro.obs import bench_cli, scaled, timer
+from repro.obs import metrics as _metrics
+from repro.scenario import Scenario, TraceSpec, sweep
+from repro.dse.space import DesignPoint
+
+POLICY = "etf"
+NUM_LANES = 32          # design lanes (cross-cluster penalty ladder)
+NUM_SEEDS = 4
+NUM_JOBS = 48
+
+
+def _bitexact(a, b) -> bool:
+    return all(np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f)))
+               for f in ("avg_latency_us", "makespan_us", "energy_j",
+                         "peak_temp_c", "busy_per_pe_us"))
+
+
+def run(smoke: bool = False):
+    lanes = scaled(NUM_LANES, 8, smoke)
+    seeds = tuple(range(scaled(NUM_SEEDS, 2, smoke)))
+    num_jobs = scaled(NUM_JOBS, 12, smoke)
+    chunk = max(1, lanes // 4)
+    # identical PE counts per lane (no pad_pes interplay): the design axis
+    # walks the interconnect penalty, which retimes every comm edge
+    points = [DesignPoint(cross_cluster_penalty=1.0 + 0.25 * i)
+              for i in range(lanes)]
+    scn = Scenario(apps=("wifi_tx",), scheduler=POLICY, governor="design",
+                   trace=TraceSpec(num_jobs=num_jobs))
+    axes = {"design": points, "seed": seeds}
+
+    results, rows = {}, []
+    mesh_width = 1
+    for mode, kw in [("base", dict(shard=False)),
+                     ("sharded", dict(shard=True)),
+                     ("chunked", dict(shard=False, chunk=chunk))]:
+        t = timer(f"bench.shard.{mode}")
+        with t:                                   # cold: includes compile
+            results[mode] = sweep(scn, axes=axes, **kw)
+        cold_us = t.last_us
+        with t:                                   # warm: cached program
+            results[mode] = sweep(scn, axes=axes, **kw)
+        if mode == "sharded":                     # before chunked overwrites
+            mesh_width = _metrics.counter("scenario.shard.devices").value
+        rows.append((f"shard/{mode}_warm_us", t.last_us,
+                     f"cold={cold_us:.0f}us"))
+        rows.append((f"shard/{mode}_lanes_per_s",
+                     lanes * len(seeds) / max(t.last_s, 1e-9),
+                     f"{lanes}x{len(seeds)}lanes"))
+
+    base = timer("bench.shard.base").last_s
+    for mode in ("sharded", "chunked"):
+        rows.append((f"shard/speedup_{mode}",
+                     base / max(timer(f"bench.shard.{mode}").last_s, 1e-9),
+                     f"{DEVICES}dev warm-vs-base"))
+    rows.append(("shard/bitexact",
+                 float(_bitexact(results["base"], results["sharded"])
+                       and _bitexact(results["base"], results["chunked"])),
+                 "1.0=sharded&chunked equal baseline"))
+    rows.append(("shard/devices", mesh_width,
+                 "lane-mesh width of the sharded mode"))
+    rows.append(("shard/pad_lanes",
+                 _metrics.counter("scenario.shard.pad_lanes").value,
+                 "inert lanes added (dropped on exit)"))
+    rows.append(("shard/chunks",
+                 _metrics.counter("scenario.sweep.chunks").value,
+                 f"chunk={chunk} over {lanes} lanes"))
+    rows.append(("shard/host_cpus", float(os.cpu_count() or 1),
+                 "physical ceiling: virtual devices time-share these"))
+    return rows
+
+
+def main(argv=None) -> int:
+    return bench_cli(run, "shard", __doc__, argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,6 +2,10 @@
 for accelerators: the event-heap reference kernel one scenario at a time vs
 the whole workload grid as ONE vmapped/jitted ``sweep`` (which also fuses
 the RC thermal co-simulation)."""
+from ._devices import apply_devices_flag
+
+apply_devices_flag()  # --devices N: sets XLA_FLAGS before the first jax use
+
 import numpy as np
 
 from repro.obs import bench_cli, scaled, timer

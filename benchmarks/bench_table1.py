@@ -1,4 +1,8 @@
 """Paper Table 1: WiFi-TX execution profiles on A7/A15/accelerators."""
+from ._devices import apply_devices_flag
+
+apply_devices_flag()  # --devices N: sets XLA_FLAGS before the first jax use
+
 from repro.core.resources import ACC_FFT, ACC_SCRAMBLER, CPU_BIG, CPU_LITTLE
 from repro.obs import bench_cli, timer
 from repro.scenario import Scenario

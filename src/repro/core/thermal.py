@@ -107,14 +107,47 @@ def exact_step(temps: np.ndarray, power_w: np.ndarray,
     return A @ np.asarray(temps, np.float64) + B @ u
 
 
+_RC_SPECTRAL = None
+
+
+def _rc_spectral():
+    """Host-precomputed (float64) spectral decomposition of the constant RC
+    state matrix: eigenvalues λ_j and rank-1 projectors P_j = v_j ⊗ w_j with
+    M = Σ λ_j P_j.  The RC network is similar to a symmetric matrix (via the
+    diagonal capacitance scaling), so the spectrum is real — asserted here.
+    """
+    global _RC_SPECTRAL  # lint: waive JX003 -- host-side memo of constant spectral data; idempotent, populated on first trace
+    if _RC_SPECTRAL is None:
+        lam, V = np.linalg.eig(rc_state_matrix())
+        assert np.abs(lam.imag).max() == 0.0, "RC spectrum must be real"
+        proj = np.einsum("ij,jk->jik", V.real, np.linalg.inv(V).real)  # (4,4,4)
+        _RC_SPECTRAL = (lam.real, proj)
+    return _RC_SPECTRAL
+
+
 def exact_step_matrices_jax(dt_s):
     """Traceable (jnp) twin of :func:`exact_step_matrices` — the single
-    definition the DTPM kernel and ``dse.thermal_jax`` consume."""
-    import jax
+    definition the DTPM kernel and ``dse.thermal_jax`` consume.
+
+    Computed spectrally — A = Σ e^{λ_j·dt} P_j, B = Σ (e^{λ_j·dt}−1)/λ_j P_j
+    with host-precomputed constant λ/P — instead of a traced ``expm``:
+    elementwise exps plus a fixed-order unrolled sum have lane-batch-width
+    independent rounding, so vmapped thermal lanes are bit-for-bit stable
+    under the sharded/chunked sweep executor (DESIGN.md §13), where XLA's
+    batched-``expm`` linalg was not.
+    """
     import jax.numpy as jnp
-    M = jnp.asarray(rc_state_matrix(), jnp.float32)
-    A = jax.scipy.linalg.expm(M * jnp.asarray(dt_s, jnp.float32))
-    B = jnp.linalg.solve(M, A - jnp.eye(4, dtype=A.dtype))
+    lam, proj = _rc_spectral()
+    dt = jnp.asarray(dt_s, jnp.float32)
+    A = B = None
+    for j in range(len(lam)):
+        lam_j = jnp.float32(lam[j])
+        p_j = jnp.asarray(proj[j], jnp.float32)
+        e_j = jnp.exp(lam_j * dt)
+        a_t = e_j[..., None, None] * p_j
+        b_t = ((e_j - 1.0) / lam_j)[..., None, None] * p_j
+        A = a_t if A is None else A + a_t
+        B = b_t if B is None else B + b_t
     return A, B
 
 

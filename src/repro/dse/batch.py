@@ -47,11 +47,19 @@ class DesignBatch:
         return self.tables.exec_opp is not None
 
 
-def stack_tables(tables: Sequence[SimTables]) -> SimTables:
-    """Leaf-wise stack of identically-shaped SimTables into (D, …) tensors."""
+def stack_tables(tables: Sequence[SimTables], host: bool = False) -> SimTables:
+    """Leaf-wise stack of identically-shaped SimTables into (D, …) tensors.
+
+    ``host=True`` stacks into numpy leaves instead of device arrays — the
+    form the chunked/sharded executor (``scenario.shardexec``) streams from,
+    so a grid larger than device memory is never device-resident at once.
+    """
     shapes = {(t.t_max, t.num_pes) for t in tables}
     if len(shapes) != 1:
         raise ValueError(f"tables must be padded to one shape, got {shapes}")
+    if host:
+        return jax.tree_util.tree_map(
+            lambda *xs: np.stack([np.asarray(x) for x in xs]), *tables)
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *tables)
 
 

@@ -72,11 +72,20 @@ def evaluate(points: Sequence[DesignPoint], apps: Sequence[Application],
              pad_pes: Optional[int] = None,
              batch: Optional[DesignBatch] = None,
              governor: str = "design",
-             governor_params: Tuple[Tuple[str, float], ...] = ()) -> EvalResult:
+             governor_params: Tuple[Tuple[str, float], ...] = (),
+             chunk: Optional[int] = None,
+             shard: Optional[bool] = None) -> EvalResult:
     """Evaluate D designs × S traces in one vmapped/jitted call per policy.
 
     ``pad_pes`` fixes the padded PE width so successive calls with different
     design mixes reuse the same compiled program (jit cache hit).
+
+    ``chunk``/``shard`` delegate to the sweep's sharded/chunked lane
+    executor (``scenario.shardexec``, DESIGN.md §13): the design lanes are
+    split across local devices and/or streamed in fixed-shape chunks with
+    bounded device memory — bit-for-bit equal to the plain batched call, so
+    ``pareto_search``/``successive_halving`` pass them through ``eval_kw``
+    unchanged.
 
     ``governor`` widens the DVFS axis of the search: the default ``"design"``
     pins each design's static frequency caps; a *dynamic* governor
@@ -121,7 +130,7 @@ def evaluate(points: Sequence[DesignPoint], apps: Sequence[Application],
             "build_design_batch(..., governor=...) matching the governor")
     sr = sweep(base, axes={"design": list(batch.points),
                            "trace": list(traces)},
-               backend="jax", design_batch=batch)
+               backend="jax", design_batch=batch, chunk=chunk, shard=shard)
     lat, energy, temps = sr.avg_latency_us, sr.energy_j, sr.peak_temp_c
     return EvalResult(points=tuple(batch.points),
                       avg_latency_us=lat.mean(axis=1),

@@ -118,11 +118,12 @@ def peak_temperature(power_trace_w: jnp.ndarray, dt_s: jnp.ndarray,
     """Peak on-chip temperature under a sustained periodic (K, 3) trace.
 
     Power is constant within a bin, so each bin advances by the *exact*
-    linear-RC solution  x' = e^{M·dt} x + M⁻¹(e^{M·dt} − I) u  — one 4×4
-    ``expm`` per trace, unconditionally stable for any bin width (unlike
-    forward Euler, which diverges once dt exceeds ~2·min(RC); bins are
-    makespan/K and the makespan is workload-dependent, so no dt bound can
-    be assumed here).
+    linear-RC solution  x' = e^{M·dt} x + M⁻¹(e^{M·dt} − I) u  — e^{M·dt}
+    built per trace from the host-precomputed spectral form (DESIGN.md §6;
+    batch-width-independent rounding, unlike a batched ``expm``),
+    unconditionally stable for any bin width (unlike forward Euler, which
+    diverges once dt exceeds ~2·min(RC); bins are makespan/K and the
+    makespan is workload-dependent, so no dt bound can be assumed here).
     """
     power_trace_w = jnp.asarray(power_trace_w, jnp.float32)
     A, B = exact_step_matrices(dt_s)

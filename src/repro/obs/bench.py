@@ -56,6 +56,13 @@ def bench_cli(run_fn: Callable[..., Rows], name: str,
     ap.add_argument("--smoke", action="store_true",
                     help="scaled-down inputs: fast lane for the CC001 "
                          "compile-count gate")
+    ap.add_argument("--devices", type=int, default=1, metavar="N",
+                    help="virtual host device count (XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N); must "
+                         "take effect before the first jax import, so it is "
+                         "applied by the benchmarks' pre-import shim "
+                         "(benchmarks._devices) — declared here only for "
+                         "--help and validation (default: 1)")
     args = ap.parse_args(argv)
     kwargs = {}
     try:

@@ -1,8 +1,9 @@
 """Named counters and timers + the run manifest.
 
-One process-wide registry replaces ad-hoc instrumentation state scattered
-through the codebase (the ``compile_count = [0]`` mutable-list hack in
-``repro.scenario.sweep``, per-benchmark ``perf_counter`` pairs).  Counters
+One process-wide registry replaces ad-hoc instrumentation state that was
+scattered through the codebase (the one-time ``compile_count = [0]``
+mutable-list hack in ``repro.scenario.sweep``, whose deprecated ``[0]``
+alias is now gone, and per-benchmark ``perf_counter`` pairs).  Counters
 and timers are cheap plain-python objects — they are incremented inside
 jitted python bodies (which run only on trace), so they count *compiles*,
 never per-step work.
@@ -27,12 +28,11 @@ MANIFEST_SCHEMA = "repro.obs/manifest/v1"
 
 
 class Counter:
-    """A named monotonic counter.
+    """A named monotonic counter (``.value`` / ``.inc()`` / ``.reset()``).
 
-    Also answers the legacy one-element-list protocol (``c[0]`` /
-    ``c[0] = n``) so the deprecated ``repro.scenario.sweep.compile_count``
-    alias keeps working for one release — new code should use ``.value`` /
-    ``.inc()``.
+    The legacy one-element-list protocol (``c[0]``), deprecated when the
+    registry replaced the ``compile_count = [0]`` hack and kept for one
+    release, has been removed.
     """
     __slots__ = ("name", "_value")
 
@@ -50,17 +50,6 @@ class Counter:
 
     def reset(self) -> None:
         self._value = 0
-
-    # -- deprecated list-style alias (compile_count[0]) --------------------
-    def __getitem__(self, i: int) -> int:
-        if i != 0:
-            raise IndexError("Counter exposes exactly one slot, [0]")
-        return self._value
-
-    def __setitem__(self, i: int, v: int) -> None:
-        if i != 0:
-            raise IndexError("Counter exposes exactly one slot, [0]")
-        self._value = int(v)
 
     def __int__(self) -> int:
         return self._value

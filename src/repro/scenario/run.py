@@ -58,9 +58,26 @@ def _cached_tables(key: Scenario, pad_pes: Optional[int]) -> SimTables:
                               table=key.schedule_table(), pad_pes=pad_pes)
 
 
-def tables_for(scn: Scenario, pad_pes: Optional[int] = None) -> SimTables:
+@functools.lru_cache(maxsize=256)
+def _cached_tables_host(key: Scenario, pad_pes: Optional[int]) -> SimTables:
+    """Host-resident (numpy-leaf) twin of :func:`_cached_tables`: built
+    fresh (not via the device cache) so only one design's device arrays are
+    ever live during construction — the chunked sweep's streaming source."""
+    db = key.soc()
+    tb = _jaxk.build_tables(db, key.applications(),
+                            governor=key.make_governor(),
+                            table=key.schedule_table(), pad_pes=pad_pes)
+    return jax.tree_util.tree_map(np.asarray, tb)
+
+
+def tables_for(scn: Scenario, pad_pes: Optional[int] = None,
+               host: bool = False) -> SimTables:
     """The scenario's ``SimTables`` (identical to the legacy ``build_tables``
-    call), cached across traces/thermal settings."""
+    call), cached across traces/thermal settings.  ``host=True`` returns the
+    numpy-leaf form the chunked/sharded sweep executor streams from
+    (DESIGN.md §13)."""
+    if host:
+        return _cached_tables_host(_tables_key(scn), pad_pes)
     return _cached_tables(_tables_key(scn), pad_pes)
 
 

@@ -1,0 +1,245 @@
+"""Sharded + chunked lane execution for sweep grids (DESIGN.md §13).
+
+The sweep's compiled grid programs are embarrassingly parallel along their
+leading *lane* axis — the stacked design axis of ``SimTables`` (static
+sweeps) or, when the policy grid is the wide one, the stacked
+:class:`~repro.core.dvfs.GovernorPolicy` axis (dynamic DTPM sweeps).  This
+module scales that axis two ways, composably:
+
+* **lane sharding** — the per-chunk lane tensors are placed with a
+  ``NamedSharding`` over the 1-D lane mesh (``repro.sharding.lane_mesh``,
+  all local devices) before entering the jitted grid program, so XLA's SPMD
+  partitioner splits the vmapped lanes across devices.  Lanes are
+  independent, so partitioning never changes per-lane numerics: sharded
+  results are bit-for-bit equal to the single-device sweep.
+* **chunked streaming** — lanes stream through ONE compiled program in
+  fixed-shape chunks (``sweep(..., chunk=N)``): the stacked lane tensors
+  stay host-resident (numpy leaves) and only one chunk is device-resident
+  at a time, with the chunk's input buffers donated back to XLA, so peak
+  device memory is O(chunk), not O(grid).
+
+Both paths pad the lane count up to the chunk/device quantum by repeating
+lane 0.  Unlike ``dse.batch``'s *in-kernel* inert padding (BIG latency,
+zero power), pad lanes here are ordinary simulations whose outputs are
+sliced off before assembly — inert by construction because lanes never
+interact.  Chunk shapes are pinned (every chunk padded to the same width,
+``pad_pes``-style), so chunking and uneven lane counts never add compiles:
+one trace per (policy shape, chunk width).
+
+Observability: ``scenario.shard.devices`` (lane-mesh width of the most
+recent launch), ``scenario.shard.pad_lanes`` (inert lanes added) and
+``scenario.sweep.chunks`` (chunks streamed) in the ``obs.metrics`` registry.
+"""
+from __future__ import annotations
+
+import functools
+import warnings
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dse.batch import _simulate_grid
+from ..dse.thermal_jax import peak_temperature_grid
+from ..core.simkernel_jax import _simulate_dtpm
+from ..obs import metrics as _metrics
+from ..sharding import lane_count, lane_mesh, lane_sharding
+
+# lane-mesh width of the most recent sharded launch (1 = unsharded)
+shard_devices = _metrics.counter("scenario.shard.devices")
+# cumulative inert pad lanes added for chunk/device-count divisibility
+shard_pad_lanes = _metrics.counter("scenario.shard.pad_lanes")
+# cumulative fixed-shape chunks streamed through the grid programs
+sweep_chunks = _metrics.counter("scenario.sweep.chunks")
+# the sweep's one-program-per-policy-shape trace counter (same registry
+# entry as ``sweep.compile_count``; looked up here, not in the jitted
+# bodies, so the registry is never touched under trace)
+_compile_count = _metrics.counter("scenario.sweep.compile_count")
+
+
+def host_tree(tree):
+    """The pytree with every array leaf as host-resident numpy (the form the
+    chunked streamer slices from, keeping device residency O(chunk))."""
+    return jax.tree_util.tree_map(np.asarray, tree)
+
+
+def padded_width(lanes: int, chunk: Optional[int], quantum: int) -> int:
+    """The pinned per-chunk lane width: ``chunk`` (or all lanes) rounded up
+    to the device-count quantum.  Fixed across chunks and across grids of
+    different lane counts (when ``chunk`` is given), so the jit cache sees
+    one shape."""
+    base = lanes if chunk is None else chunk
+    return -(-base // quantum) * quantum
+
+
+def pad_lane_axis(tree, lanes: int, width: int, axis: int = 0):
+    """Pad every leaf's lane ``axis`` from ``lanes`` up to ``width`` by
+    repeating lane 0 — pad lanes are real, independent simulations whose
+    outputs are dropped, so padding is inert by construction."""
+    if lanes == width:
+        return tree
+
+    def _pad(x):
+        reps = np.take(x, np.zeros(width - lanes, np.intp), axis=axis)
+        return np.concatenate([np.asarray(x), reps], axis=axis)
+
+    return jax.tree_util.tree_map(_pad, tree)
+
+
+def _device_put_lanes(tree, mesh):
+    """Place a chunk's lane tensors: sharded over the lane mesh when one is
+    installed, default single-device placement otherwise."""
+    if mesh is None:
+        return jax.tree_util.tree_map(jnp.asarray, tree)
+    sharding = lane_sharding(mesh)
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(jnp.asarray(x), sharding), tree)
+
+
+def _slice_lanes(tree, lo: int, hi: int, axis: int = 0):
+    return jax.tree_util.tree_map(
+        lambda x: x[(slice(None),) * axis + (slice(lo, hi),)], tree)
+
+
+# --------------------------------------------------------------------------
+# The jitted chunk programs — one trace per (policy shape, chunk width).
+# The lane-chunk arguments are donated: each chunk's buffers are freshly
+# device_put by the streamer, so XLA may reuse them for the outputs and the
+# previous chunk never outlives its step.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("policy", "num_jobs", "bins", "repeats"),
+                   donate_argnames=("tables", "node_of_pe"))
+def _chunk_static(tables, node_of_pe, arrival, app_idx, policy, num_jobs,
+                  bins, repeats):
+    """Static-governor chunk: schedule simulation + RC thermal scan for the
+    (Dc, S) lane chunk — same fused body as ``sweep._sweep_grid``."""
+    _compile_count.inc()  # lint: waive JX003 -- deliberate: counts compiles, python body runs per trace
+    out = _simulate_grid(tables, policy, num_jobs, arrival, app_idx)
+    temps = peak_temperature_grid(out, node_of_pe, tables.power_active,
+                                  tables.power_idle, bins=bins,
+                                  repeats=repeats)
+    return out, temps
+
+
+def _dtpm_grid(tables, gov, arrival, app_idx, policy, num_jobs):
+    _compile_count.inc()  # lint: waive JX003 -- deliberate: counts compiles, python body runs per trace
+    per_trace = jax.vmap(
+        lambda tb, g, a, i: _simulate_dtpm(tb, policy, num_jobs, a, i, g),
+        in_axes=(None, None, 0, 0))
+    per_policy = jax.vmap(per_trace, in_axes=(None, 0, None, None))
+    per_design = jax.vmap(per_policy, in_axes=(0, None, None, None))
+    return per_design(tables, gov, arrival, app_idx)
+
+
+# Two donation variants of the same DTPM grid: only the streamed lane
+# argument is freshly allocated per chunk (the other is reused across
+# chunks and must not be donated).
+_chunk_dtpm_design = functools.partial(
+    jax.jit, static_argnames=("policy", "num_jobs"),
+    donate_argnames=("tables",))(_dtpm_grid)
+_chunk_dtpm_policy = functools.partial(
+    jax.jit, static_argnames=("policy", "num_jobs"),
+    donate_argnames=("gov",))(_dtpm_grid)
+
+
+# --------------------------------------------------------------------------
+# The streamer
+# --------------------------------------------------------------------------
+
+def _stream(lane_tree, lanes: int, chunk: Optional[int], mesh,
+            launch) -> list:
+    """Stream ``lane_tree`` (host numpy leaves, lane axis leading) through
+    ``launch(device_chunk)`` in fixed-width chunks; returns the per-chunk
+    results with pad lanes still attached (callers slice after concat)."""
+    quantum = lane_count(mesh)
+    width = padded_width(lanes, chunk, quantum)
+    shard_devices.reset()
+    shard_devices.inc(quantum)
+    outs = []
+    for lo in range(0, lanes, width):
+        hi = min(lo + width, lanes)
+        piece = _slice_lanes(lane_tree, lo, hi)
+        if hi - lo < width:
+            shard_pad_lanes.inc(width - (hi - lo))
+            piece = pad_lane_axis(piece, hi - lo, width)
+        sweep_chunks.inc()
+        with warnings.catch_warnings():
+            # the CPU backend cannot alias donated buffers and warns per
+            # launch; donation is the accelerator story, the warning is noise
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            outs.append(launch(_device_put_lanes(piece, mesh)))
+    return outs
+
+
+def _concat_out(chunks: list, lanes: int, axis: int = 0) -> Dict:
+    """Concatenate per-chunk output dicts on the lane axis and drop the pad
+    lanes (host-side: chunk outputs leave the device as they arrive)."""
+    keys = chunks[0].keys()
+    out = {k: np.concatenate([np.asarray(c[k]) for c in chunks], axis=axis)
+           for k in keys}
+    sl = (slice(None),) * axis + (slice(0, lanes),)
+    return {k: v[sl] for k, v in out.items()}
+
+
+def run_static_grid(tables, node_of_pe, arrival, app_idx, *, policy: str,
+                    num_jobs: int, bins: int, repeats: int,
+                    chunk: Optional[int] = None,
+                    mesh=None) -> Tuple[Dict, np.ndarray]:
+    """The sharded/chunked twin of ``sweep._sweep_grid``: (D, S) lanes with
+    the design axis streamed/sharded; returns host-resident outputs with
+    exactly D lanes (bit-for-bit equal to the unsharded grid)."""
+    lanes = int(np.asarray(tables.exec_us).shape[0])
+    lane_tree = (host_tree(tables), host_tree(node_of_pe))
+
+    def launch(piece):
+        tb, nodes = piece
+        out, temps = _chunk_static(tb, nodes, arrival, app_idx,
+                                   policy=policy, num_jobs=num_jobs,
+                                   bins=bins, repeats=repeats)
+        out = dict(out)
+        out["_peak_temp_scan_c"] = temps
+        return out
+
+    out = _concat_out(_stream(lane_tree, lanes, chunk, mesh, launch), lanes)
+    return out, out.pop("_peak_temp_scan_c")
+
+
+def run_dtpm_grid(tables, gov, arrival, app_idx, *, policy: str,
+                  num_jobs: int, chunk: Optional[int] = None,
+                  mesh=None) -> Dict:
+    """The sharded/chunked twin of ``sweep._sweep_grid_dtpm``: (D, G, S)
+    lanes, streaming/sharding whichever of the design (D) and policy (G)
+    axes is wider — the GovernorPolicy leaves are as much a lane stack as
+    the SimTables leaves (DESIGN.md §10)."""
+    D = int(np.asarray(tables.exec_us).shape[0])
+    G = int(np.asarray(gov.up_threshold).shape[0])
+    tables_h, gov_h = host_tree(tables), host_tree(gov)
+    if D >= G:                               # stream designs, reuse policies
+        gov_dev = jax.tree_util.tree_map(jnp.asarray, gov_h)
+
+        def launch(tb):
+            return _chunk_dtpm_design(tb, gov_dev, arrival, app_idx,
+                                      policy=policy, num_jobs=num_jobs)
+
+        return _concat_out(_stream(tables_h, D, chunk, mesh, launch), D)
+    tables_dev = jax.tree_util.tree_map(jnp.asarray, tables_h)
+
+    def launch(g):
+        return _chunk_dtpm_policy(tables_dev, g, arrival, app_idx,
+                                  policy=policy, num_jobs=num_jobs)
+
+    return _concat_out(_stream(gov_h, G, chunk, mesh, launch), G, axis=1)
+
+
+def resolve_mesh(shard: Optional[bool], devices=None):
+    """The lane mesh a sweep should use: ``shard=None`` auto-shards when
+    more than one local device is present, ``False`` never shards, ``True``
+    asks for the mesh explicitly (still ``None`` — unsharded — when only
+    one device exists; the chunked path works either way)."""
+    if shard is False:
+        return None
+    return lane_mesh(devices)

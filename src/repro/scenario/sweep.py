@@ -22,8 +22,8 @@ factorise into four kinds (see DESIGN.md §9–10):
 For one scheduler the whole (designs × policies × traces) cross-product runs
 as ONE vmapped/jitted tensor program per *policy shape* (static / dynamic) —
 and every lane is bit-for-bit equal to a per-point ``run(..., backend="jax")``
-(padding is inert; a vmap lane equals a single call; the sole exception is
-thermal-throttle feedback, whose batched ``expm`` may round differently).
+(padding is inert; a vmap lane equals a single call; the RC stepper's
+spectral e^{A·dt} keeps the thermal math batch-width independent).
 ``backend="ref"`` sweeps the same cross-product through the event-heap
 oracle lane by lane.
 """
@@ -46,6 +46,7 @@ from ..dse.space import DesignPoint
 from ..dse.thermal_jax import peak_temperature_grid
 from ..obs import metrics as _metrics
 from ..obs import telemetry as _obs_tel
+from . import shardexec
 from .config import Scenario, TraceSpec
 from .result import SweepResult
 from .run import run, tables_for
@@ -61,10 +62,9 @@ _TRACE_FIELDS = {f.name for f in dataclasses.fields(TraceSpec)}
 
 # number of times a fused grid program has been traced (re-compiled); the
 # one-program-per-policy-shape sweep contract is asserted against this.
-# The registered obs counter IS the module attribute — ``compile_count[0]``
-# keeps reading/writing it (deprecated one-element-list alias, kept for one
-# release); new code uses ``compile_count.value`` / the ``obs.metrics``
-# registry (DESIGN.md §11).
+# The registered obs counter IS the module attribute — read it via
+# ``compile_count.value`` / the ``obs.metrics`` registry (DESIGN.md §11;
+# the deprecated ``compile_count[0]`` list alias is gone).
 compile_count = _metrics.counter("scenario.sweep.compile_count")
 
 
@@ -145,8 +145,12 @@ def _sweep_grid_dtpm(tables, gov, arrival, app_idx, policy, num_jobs):
 
 
 def _design_lanes(base: Scenario, design_axes: List[str],
-                  combos: List[Tuple], pad_pes: Optional[int]):
-    """Padded+stacked tables and thermal-node map for the design lanes."""
+                  combos: List[Tuple], pad_pes: Optional[int],
+                  host: bool = False):
+    """Padded+stacked tables and thermal-node map for the design lanes.
+
+    ``host=True`` stacks numpy leaves (the chunked/sharded executor's
+    streaming source — the full grid never becomes device-resident)."""
     scns = [_apply_axes(base, design_axes, c) for c in combos]
     dbs = [s.soc() for s in scns]
     P = max(db.num_pes for db in dbs)
@@ -154,13 +158,16 @@ def _design_lanes(base: Scenario, design_axes: List[str],
         if pad_pes < P:
             raise ValueError(f"pad_pes={pad_pes} < widest design {P}")
         P = pad_pes
-    tables = stack_tables([tables_for(s, pad_pes=P) for s in scns])
+    tables = stack_tables([tables_for(s, pad_pes=P, host=host) for s in scns],
+                          host=host)
     return tables, pad_node_map(dbs, P)
 
 
 def sweep(scenario: Scenario, axes: Dict[str, Sequence],
           backend: str = "jax", pad_pes: Optional[int] = None,
-          design_batch=None, telemetry: Optional[bool] = None) -> SweepResult:
+          design_batch=None, telemetry: Optional[bool] = None,
+          chunk: Optional[int] = None,
+          shard: Optional[bool] = None) -> SweepResult:
     """Simulate the cross-product of ``axes`` around ``scenario``.
 
     ``axes`` maps axis names to value sequences; result arrays are shaped
@@ -176,9 +183,22 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
     like the axes).  On the jax backend the lanes' timelines are replayed
     from the already-computed grid outputs through the kernels' jitted
     telemetry scans — the simulations are not re-run (DESIGN.md §11).
+
+    ``chunk``/``shard`` scale the design/policy lane axis (jax backend only,
+    DESIGN.md §13): ``shard`` splits the lanes across the local devices via
+    a ``NamedSharding`` over ``repro.sharding.lane_mesh()`` (default
+    ``None`` = auto — shard exactly when more than one device is present;
+    ``False`` pins the single-device path); ``chunk=N`` streams the lanes
+    through ONE compiled program in fixed-shape N-lane chunks with donated
+    input buffers, bounding peak device memory at O(chunk) instead of
+    O(grid).  Both are bit-for-bit equal to the unsharded sweep — lanes are
+    independent, and uneven lane counts are padded with inert (dropped)
+    lanes — and neither adds compiles per policy shape.
     """
     if not axes:
         raise ValueError("axes must name at least one swept dimension")
+    if chunk is not None and (not isinstance(chunk, int) or chunk < 1):
+        raise ValueError(f"chunk must be a positive lane count, got {chunk!r}")
     names = list(axes)
     values = {n: tuple(axes[n]) for n in names}
     if any(len(v) == 0 for v in values.values()):
@@ -205,11 +225,16 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
 
     want_tel = scenario.telemetry if telemetry is None else bool(telemetry)
     if backend == "ref":
+        if chunk is not None or shard:
+            raise ValueError("chunk/shard are jax-backend lane options; the "
+                             "ref backend runs lane by lane already")
         return _sweep_ref(scenario, names, values, want_tel)
     if backend != "jax":
         raise ValueError(f"unknown backend {backend!r}")
     if scenario.failures:
         raise ValueError("fail-stop injection is reference-kernel only")
+    mesh = shardexec.resolve_mesh(shard)
+    lane_exec = chunk is not None or mesh is not None
 
     # classify the governor lanes by policy shape: static governors bake
     # into the tables (design-kind lanes), the dynamic ondemand family
@@ -292,7 +317,8 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
         for sc in static_combos)
     if design_batch is None and not rebuild_per_combo:
         tables, node_of_pe = _design_lanes(lane_base, design_axes,
-                                           design_combos, pad_pes)
+                                           design_combos, pad_pes,
+                                           host=lane_exec)
 
     gov_stack = stack_policies(policies) if dynamic else None
 
@@ -301,18 +327,33 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
         s_scn = _apply_axes(lane_base, static_axes, sc)
         if rebuild_per_combo:
             tables, node_of_pe = _design_lanes(s_scn, design_axes,
-                                               design_combos, pad_pes)
+                                               design_combos, pad_pes,
+                                               host=lane_exec)
         if dynamic:
-            out = _sweep_grid_dtpm(tables, gov_stack, arrival, app_idx,
-                                   policy=s_scn.scheduler,
-                                   num_jobs=num_jobs)
+            if lane_exec:
+                out = shardexec.run_dtpm_grid(tables, gov_stack, arrival,
+                                              app_idx,
+                                              policy=s_scn.scheduler,
+                                              num_jobs=num_jobs,
+                                              chunk=chunk, mesh=mesh)
+            else:
+                out = _sweep_grid_dtpm(tables, gov_stack, arrival, app_idx,
+                                       policy=s_scn.scheduler,
+                                       num_jobs=num_jobs)
             temps = out["peak_temp_c"]
         else:
-            out, temps = _sweep_grid(tables, node_of_pe, arrival, app_idx,
-                                     policy=s_scn.scheduler,
-                                     num_jobs=num_jobs,
-                                     bins=s_scn.thermal.bins,
-                                     repeats=s_scn.thermal.repeats)
+            if lane_exec:
+                out, temps = shardexec.run_static_grid(
+                    tables, node_of_pe, arrival, app_idx,
+                    policy=s_scn.scheduler, num_jobs=num_jobs,
+                    bins=s_scn.thermal.bins, repeats=s_scn.thermal.repeats,
+                    chunk=chunk, mesh=mesh)
+            else:
+                out, temps = _sweep_grid(tables, node_of_pe, arrival, app_idx,
+                                         policy=s_scn.scheduler,
+                                         num_jobs=num_jobs,
+                                         bins=s_scn.thermal.bins,
+                                         repeats=s_scn.thermal.repeats)
         per_static.append(dict(
             avg_latency_us=np.asarray(out["avg_job_latency_us"], np.float64),
             makespan_us=np.asarray(out["makespan_us"], np.float64),

@@ -12,6 +12,7 @@ import threading
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MeshAxes = Union[None, str, Tuple[str, ...]]
@@ -121,6 +122,39 @@ def named_sharding(axes: Sequence[Optional[str]]) -> Optional[NamedSharding]:
 
 def current_mesh() -> Optional[Mesh]:
     return _mesh()
+
+
+# Lane meshes — 1-D device meshes for embarrassingly-parallel lane axes ------
+
+LANE_AXIS = "lanes"
+
+
+def lane_mesh(devices: Optional[Sequence[jax.Device]] = None,
+              ) -> Optional[Mesh]:
+    """A 1-D mesh over the local devices, axis name :data:`LANE_AXIS`.
+
+    The simulator's sweep grids are embarrassingly parallel along their
+    leading design/policy lane axis (every lane is an independent vmapped
+    simulation), so a flat 1-D mesh is the whole story — no model/data
+    split.  Returns ``None`` on a single device: callers fall back to the
+    unsharded path and nothing is ever resharded on 1-device hosts.
+    """
+    devices = tuple(devices) if devices is not None else tuple(
+        jax.local_devices())
+    if len(devices) <= 1:
+        return None
+    return Mesh(np.asarray(devices), (LANE_AXIS,))
+
+
+def lane_sharding(mesh: Mesh) -> NamedSharding:
+    """``NamedSharding`` splitting an array's *leading* axis across the
+    lane mesh (remaining axes replicated)."""
+    return NamedSharding(mesh, P(LANE_AXIS))
+
+
+def lane_count(mesh: Optional[Mesh]) -> int:
+    """Devices along the lane axis (1 when unsharded)."""
+    return 1 if mesh is None else int(mesh.shape[LANE_AXIS])
 
 
 def mesh_axis(logical: str):

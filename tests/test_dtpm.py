@@ -235,9 +235,9 @@ def test_sweep_32_policies_one_program_with_inline_peak_temp():
               for w in (25.0, 50.0, 100.0, 200.0)]
     assert len(params) == 32
     scn = SCN.replace(governor="ondemand")
-    n0 = compile_count[0]
+    n0 = compile_count.value
     sr = sweep(scn, axes={"governor_params": params})
-    assert compile_count[0] - n0 <= 1       # ONE program (0 if cache-warm)
+    assert compile_count.value - n0 <= 1       # ONE program (0 if cache-warm)
     assert sr.shape == (32,)
     assert sr.peak_temp_c.shape == (32,)
     assert np.all(np.isfinite(sr.peak_temp_c))

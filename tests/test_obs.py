@@ -54,27 +54,27 @@ def test_counter_and_timer_registry():
     c.reset()
     assert c.inc() == 1 and c.inc(3) == 4
     assert c.value == 4 and int(c) == 4
-    # deprecated one-element-list alias (the old compile_count protocol)
-    assert c[0] == 4
-    c[0] = 7
-    assert c.value == 7
-    with pytest.raises(IndexError):
-        c[1]
     t = metrics.timer("test_obs.timer")
     with t:
         pass
     assert t.count >= 1 and t.last_s >= 0.0
     assert t.last_us == t.last_s * 1e6
     snap = metrics.snapshot()
-    assert snap["counters"]["test_obs.count"] == 7
+    assert snap["counters"]["test_obs.count"] == 4
     assert "test_obs.timer" in snap["timers"]
 
 
 def test_sweep_compile_count_is_obs_counter():
-    """The legacy module attribute IS the registered counter — old-style
-    ``compile_count[0]`` reads keep working for one release."""
+    """The legacy module attribute IS the registered counter; the deprecated
+    one-element-list alias (``compile_count[0]``), kept for one release
+    after the registry landed, is now gone."""
     assert compile_count is metrics.counter("scenario.sweep.compile_count")
-    assert compile_count[0] == compile_count.value
+    with pytest.raises(TypeError):
+        compile_count[0]                            # noqa: B018 — alias removed
+    with pytest.raises(TypeError):
+        compile_count[0] = 7
+    assert not hasattr(metrics.Counter, "__getitem__")
+    assert not hasattr(metrics.Counter, "__setitem__")
 
 
 def test_window_sizing_helpers():

@@ -129,9 +129,9 @@ def test_sweep_two_axes_matches_run_in_one_compiled_program():
     points = [DesignPoint(4, 4, 2, 4, 0), DesignPoint(1, 2, 0, 1, 0),
               DesignPoint(0, 4, 1, 2, 1, big_freq_ghz=1.4)]
     rates = [5.0, 40.0]
-    n0 = compile_count[0]
+    n0 = compile_count.value
     sr = sweep(MIX, axes={"rate": rates, "design": points})
-    assert compile_count[0] - n0 <= 1       # ONE program (0 if cache-warm)
+    assert compile_count.value - n0 <= 1       # ONE program (0 if cache-warm)
     assert sr.shape == (2, 3) and sr.avg_latency_us.shape == (2, 3)
     for i, rate in enumerate(rates):
         for d, p in enumerate(points):
@@ -147,16 +147,16 @@ def test_sweep_two_axes_matches_run_in_one_compiled_program():
 def test_sweep_repeat_call_hits_jit_cache():
     axes = {"rate": [5.0, 40.0], "seed": [0, 1]}
     sweep(MIX, axes=axes)
-    n0 = compile_count[0]
+    n0 = compile_count.value
     sweep(MIX, axes=axes)
-    assert compile_count[0] == n0
+    assert compile_count.value == n0
 
 
 def test_sweep_scheduler_axis_is_static():
-    n0 = compile_count[0]
+    n0 = compile_count.value
     sr = sweep(SCN, axes={"scheduler": ["met", "etf"], "rate": [5.0, 40.0]})
     assert sr.shape == (2, 2)
-    assert compile_count[0] - n0 <= 2       # one program per policy
+    assert compile_count.value - n0 <= 2       # one program per policy
     for j, rate in enumerate([5.0, 40.0]):
         ref = run(SCN.replace(scheduler="met").at_rate(rate), backend="jax")
         assert sr.avg_latency_us[0, j] == ref.avg_latency_us
