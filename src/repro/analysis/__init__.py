@@ -6,21 +6,34 @@ kernels costs no device init and works without jax installed):
 * **JX001** tracer-leak, **JX002** host-numpy-in-jit, **JX003** impure-jit
   — on the jit-reachable set (:mod:`.reachability`)
 * **PT001** pytree registration contracts
-* **UN001** unit-suffix discipline on result structs
+* **UN001** unit-suffix discipline on result structs (``--fix`` can apply
+  the suggested renames mechanically, :mod:`.fix`)
+* **SC001** scan-carry stability (arity / order / dtype across loop bodies)
+* **DN001** use-after-donate on jit call sites
+* **SH001** lane-sharding contracts (leading-axis PartitionSpec, no
+  device_put / mesh construction under trace)
 * **CC001** compile-count regression gate over ``BENCH_*.json`` artifacts
+
+Findings carry a severity (``error``/``warn``/``info``; per-rule overrides
+in config): ``error`` gates every run, ``warn`` gates under ``--strict``,
+``info`` never.  Reports emit as text, JSON, or SARIF 2.1.0
+(:mod:`.sarif`) for CI code-scanning annotations.
 
 CLI: ``python -m repro.analysis`` (see ``--help``); config lives in the
 ``[tool.repro.analysis]`` table of ``pyproject.toml``; inline waivers are
 ``# lint: waive CODE -- justification``.  DESIGN.md §12 documents the
 rules and the waiver policy.
 """
-from .config import ALL_RULES, AnalysisConfig, load_config
+from .config import (ALL_RULES, DEFAULT_SEVERITY, RULE_DOCS, AnalysisConfig,
+                     load_config)
 from .engine import AnalysisReport, changed_files, run_analysis
-from .findings import Finding, render_report, report_payload
+from .findings import Finding, gating, render_report, report_payload
 from .compile_gate import check_compile_gate, load_contracts
+from .sarif import render_sarif, sarif_payload
 
 __all__ = [
-    "ALL_RULES", "AnalysisConfig", "AnalysisReport", "Finding",
-    "changed_files", "check_compile_gate", "load_config", "load_contracts",
-    "render_report", "report_payload", "run_analysis",
+    "ALL_RULES", "AnalysisConfig", "AnalysisReport", "DEFAULT_SEVERITY",
+    "Finding", "RULE_DOCS", "changed_files", "check_compile_gate", "gating",
+    "load_config", "load_contracts", "render_report", "render_sarif",
+    "report_payload", "run_analysis", "sarif_payload",
 ]

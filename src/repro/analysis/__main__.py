@@ -3,17 +3,21 @@
 Examples::
 
     python -m repro.analysis                      # lint configured paths
-    python -m repro.analysis --strict             # waivers need a reason
+    python -m repro.analysis --strict             # warns gate, waivers need a reason
     python -m repro.analysis --changed            # only files vs main
     python -m repro.analysis --select JX001,JX003
     python -m repro.analysis --report findings.json
+    python -m repro.analysis --sarif findings.sarif
+    python -m repro.analysis --format sarif       # SARIF log on stdout
+    python -m repro.analysis --fix                # apply UN001 renames
     python -m repro.analysis --compile-gate BENCH_*.json
     python -m repro.analysis --list-rules
 
-Exit status: 0 when no *active* (unwaived) findings, 1 otherwise, 2 on
-usage errors.  Waived findings print with a ``(waived)`` tag and never
-gate; ``--strict`` additionally requires every waiver to carry a
-``-- justification`` (WV001).
+Exit status: 0 when no *gating* findings, 1 otherwise, 2 on usage errors.
+A finding gates per its severity: ``error`` always, ``warn`` only under
+``--strict`` (the CI mode), ``info`` never.  Waived findings print with a
+``(waived)`` tag and never gate; ``--strict`` additionally requires every
+waiver to carry a ``-- justification`` (WV001).
 """
 from __future__ import annotations
 
@@ -23,24 +27,10 @@ from pathlib import Path
 from typing import List, Optional, Sequence
 
 from .compile_gate import check_compile_gate
-from .config import ALL_RULES, load_config
+from .config import ALL_RULES, DEFAULT_SEVERITY, RULE_DOCS, load_config
 from .engine import changed_files, run_analysis
 from .findings import dump_report, render_report
-
-_RULE_DOCS = {
-    "JX001": "tracer-leak: .item()/bool()/int()/float()/if/while on "
-             "traced values in jit-reachable code",
-    "JX002": "host-numpy-in-jit: np.* calls on traced data (use jnp)",
-    "JX003": "impure-jit: print/wall-clock/host-RNG/global or self "
-             "mutation inside jitted code",
-    "PT001": "pytree-contract: register_dataclass targets frozen, "
-             "data/meta split exact, meta fields hashable",
-    "UN001": "unit-suffix: numeric fields and payload keys on result "
-             "structs carry _us/_j/_w/_c/_hz/... suffixes",
-    "CC001": "compile-count gate: BENCH_*.json counters within "
-             "contracts.json budgets",
-    "WV001": "(strict only) waiver comment missing its -- justification",
-}
+from .sarif import dump_sarif, render_sarif
 
 
 def _codes(arg: Optional[str]) -> Optional[List[str]]:
@@ -58,7 +48,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="explicit files to lint (default: configured "
                          "paths)")
     ap.add_argument("--strict", action="store_true",
-                    help="waivers must carry a justification (WV001)")
+                    help="warn-severity findings gate; waivers must carry "
+                         "a justification (WV001)")
     ap.add_argument("--changed", action="store_true",
                     help="lint only files changed vs --base")
     ap.add_argument("--base", default="main",
@@ -69,6 +60,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="comma-separated rule codes to skip")
     ap.add_argument("--report", metavar="PATH",
                     help="write the findings report JSON (CI artifact)")
+    ap.add_argument("--sarif", metavar="PATH",
+                    help="write a SARIF 2.1.0 log (CI code-scanning "
+                         "upload)")
+    ap.add_argument("--format", choices=("text", "sarif"), default="text",
+                    help="stdout format (default: text)")
+    ap.add_argument("--fix", action="store_true",
+                    help="mechanically apply UN001 unit-suffix renames "
+                         "(definition + call sites), then re-lint")
     ap.add_argument("--root", metavar="DIR", default=None,
                     help="repo root (default: nearest pyproject.toml)")
     ap.add_argument("--compile-gate", nargs="+", metavar="BENCH_JSON",
@@ -78,12 +77,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="contracts.json for --compile-gate (default: "
                          "from [tool.repro.analysis])")
     ap.add_argument("--list-rules", action="store_true",
-                    help="print rule codes and exit")
+                    help="print rule codes, severities and summaries")
     args = ap.parse_args(argv)
 
     if args.list_rules:
         for code in (*ALL_RULES, "WV001"):
-            print(f"{code}  {_RULE_DOCS[code]}")
+            level = DEFAULT_SEVERITY.get(code, "error")
+            print(f"{code}  [{level:5s}]  {RULE_DOCS[code]}")
         return 0
 
     cfg = load_config(Path(args.root) if args.root else None)
@@ -100,11 +100,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             print(render_report(findings))
             if args.report:
                 dump_report(findings, args.report, rules=["CC001"])
+            if args.sarif:
+                dump_sarif(findings, args.sarif)
             return 1
         print(f"CC001: {len(args.compile_gate)} bench artifact(s) within "
               f"contract ({contracts})")
         if args.report:
             dump_report([], args.report, rules=["CC001"])
+        if args.sarif:
+            dump_sarif([], args.sarif)
         return 0
 
     only: Optional[List[str]] = None
@@ -119,6 +123,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     elif args.files:
         only = args.files
 
+    if args.fix:
+        from .fix import apply_fixes, plan_fixes
+        from .project import ProjectIndex
+        index = ProjectIndex.build(cfg.root, cfg.paths)
+        result = apply_fixes(cfg.root, plan_fixes(index, cfg))
+        for note in result.skipped:
+            print(f"fix: skipped {note}")
+        print(f"fix: applied {result.applied} edit(s) across "
+              f"{len(result.files)} file(s)")
+        # fall through and re-lint the rewritten tree
+
     try:
         report = run_analysis(cfg, select=_codes(args.select),
                               ignore=_codes(args.ignore),
@@ -130,7 +145,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if args.report:
         dump_report(report.findings, args.report, rules=list(report.rules),
                     files=report.files)
-    if report.findings:
+    if args.sarif:
+        dump_sarif(report.findings, args.sarif)
+    if args.format == "sarif":
+        print(render_sarif(report.findings))
+    elif report.findings:
         print(render_report(report.findings))
     else:
         scope = f"{len(only)} changed/selected file(s)" if only \

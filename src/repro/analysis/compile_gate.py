@@ -75,10 +75,11 @@ def check_compile_gate(contracts_path: Path,
             if actual > limit:
                 out.append(Finding(
                     code="CC001", path=cpath, line=1,
-                    message=f"`{bench}`: counter `{name}` hit "
+                    message=f"benchmark `{bench}`: counter `{name}` hit "
                             f"{actual:g} compiles, contract allows "
-                            f"{limit} — a jit cache key regressed "
-                            f"(or raise the contract with justification)"))
+                            f"{limit} (+{actual - limit:g} over budget) — "
+                            f"a jit cache key regressed (or raise the "
+                            f"contract with justification)"))
         stray = sorted(set(counters) - set(contract))
         for name in stray:
             if counters[name] > 0:

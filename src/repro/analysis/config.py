@@ -1,15 +1,23 @@
 """Repo-root configuration for ``repro.analysis`` (``pyproject.toml``).
 
-The ``[tool.repro.analysis]`` block selects rules, lint paths and the UN001
-unit vocabulary::
+The ``[tool.repro.analysis]`` block selects rules, lint paths, per-rule
+severity and the UN001 unit vocabulary::
 
     [tool.repro.analysis]
     paths = ["src/repro", "benchmarks", "examples"]
     disable = []                      # rule codes switched off repo-wide
+    severity = ["SH001=warn"]         # per-rule level: error | warn | info
     unit-suffixes = ["_j", "_w", ...] # accepted unit suffixes (UN001)
     unit-structs = ["EnergyReport"]   # dataclasses UN001 audits
     unit-allow = ["util*", "*_idx"]   # dimensionless names (fnmatch)
     contracts = "src/repro/analysis/contracts.json"
+
+Severity semantics: ``error`` findings gate (CLI exit 1), ``warn`` findings
+print but only gate under ``--strict`` (the CI mode), ``info`` findings
+never gate.  ``severity`` accepts either the ``["CODE=level", …]`` list
+form above (parseable by the minimal fallback parser) or a
+``[tool.repro.analysis.severity]`` sub-table when ``tomllib``/``tomli``
+is available.
 
 Python 3.10 has no ``tomllib``; a minimal single-section parser handles the
 subset this block uses (strings, string lists, booleans) when neither
@@ -23,7 +31,41 @@ from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
 ALL_RULES: Tuple[str, ...] = ("JX001", "JX002", "JX003", "PT001", "UN001",
-                              "CC001")
+                              "SC001", "DN001", "SH001", "CC001")
+
+SEVERITY_LEVELS: Tuple[str, ...] = ("error", "warn", "info")
+
+#: default per-rule severity; SH001's sharding-contract checks are
+#: heuristics over placement conventions, so they warn by default (and
+#: gate only under --strict, the CI mode)
+DEFAULT_SEVERITY: Dict[str, str] = {
+    "JX001": "error", "JX002": "error", "JX003": "error",
+    "PT001": "error", "UN001": "error",
+    "SC001": "error", "DN001": "error", "SH001": "warn",
+    "CC001": "error", "WV001": "error",
+}
+
+#: one-line rule summaries (CLI --list-rules, SARIF rule metadata)
+RULE_DOCS: Dict[str, str] = {
+    "JX001": "tracer-leak: .item()/bool()/int()/float()/if/while on "
+             "traced values in jit-reachable code",
+    "JX002": "host-numpy-in-jit: np.* calls on traced data (use jnp)",
+    "JX003": "impure-jit: print/wall-clock/host-RNG/global or self "
+             "mutation inside jitted code",
+    "PT001": "pytree-contract: register_dataclass targets frozen, "
+             "data/meta split exact, meta fields hashable",
+    "UN001": "unit-suffix: numeric fields and payload keys on result "
+             "structs carry _us/_j/_w/_c/_hz/... suffixes",
+    "SC001": "scan-carry: lax.scan/while_loop/fori_loop bodies must keep "
+             "carry arity, element order and dtype stable",
+    "DN001": "use-after-donate: arguments donated to a jit "
+             "(donate_argnums/argnames) must not be read after the call",
+    "SH001": "lane-sharding: leading-axis 'lanes' PartitionSpec, no "
+             "device_put/mesh construction inside a traced body",
+    "CC001": "compile-count gate: BENCH_*.json counters within "
+             "contracts.json budgets",
+    "WV001": "(strict only) waiver comment missing its -- justification",
+}
 
 DEFAULT_PATHS = ("src/repro", "benchmarks", "examples")
 DEFAULT_SUFFIXES = ("_j", "_w", "_s", "_us", "_ms", "_c", "_hz", "_ghz")
@@ -41,6 +83,7 @@ class AnalysisConfig:
     root: Path
     paths: Tuple[str, ...] = DEFAULT_PATHS
     disable: Tuple[str, ...] = ()
+    severity: Tuple[Tuple[str, str], ...] = ()   # per-rule overrides
     unit_suffixes: Tuple[str, ...] = DEFAULT_SUFFIXES
     unit_structs: Tuple[str, ...] = DEFAULT_UNIT_STRUCTS
     unit_allow: Tuple[str, ...] = DEFAULT_UNIT_ALLOW
@@ -57,6 +100,12 @@ class AnalysisConfig:
             raise ValueError(f"unknown rule code(s) {unknown}; "
                              f"known: {list(ALL_RULES)}")
         return tuple(rules)
+
+    def severity_for(self, code: str) -> str:
+        for rule, level in self.severity:
+            if rule == code:
+                return level
+        return DEFAULT_SEVERITY.get(code, "error")
 
 
 def _parse_toml(text: str) -> Dict:
@@ -148,9 +197,31 @@ def load_config(root: Optional[Path] = None) -> AnalysisConfig:
         root=root,
         paths=tup("paths", DEFAULT_PATHS),
         disable=tup("disable", ()),
+        severity=_parse_severity(block.get("severity")),
         unit_suffixes=tup("unit-suffixes", DEFAULT_SUFFIXES),
         unit_structs=tup("unit-structs", DEFAULT_UNIT_STRUCTS),
         unit_allow=tup("unit-allow", DEFAULT_UNIT_ALLOW),
         contracts=str(block.get("contracts",
                                 "src/repro/analysis/contracts.json")),
     )
+
+
+def _parse_severity(val) -> Tuple[Tuple[str, str], ...]:
+    """Per-rule severity overrides: a ``{"SH001": "warn"}`` sub-table (full
+    TOML parsers) or the ``["SH001=warn"]`` list form (fallback parser)."""
+    if val is None:
+        return ()
+    if isinstance(val, dict):
+        pairs = [(str(k), str(v)) for k, v in val.items()]
+    else:
+        pairs = []
+        for item in val:
+            code, _, level = str(item).partition("=")
+            pairs.append((code.strip(), level.strip()))
+    for code, level in pairs:
+        if code not in ALL_RULES and code != "WV001":
+            raise ValueError(f"severity override for unknown rule {code!r}")
+        if level not in SEVERITY_LEVELS:
+            raise ValueError(f"severity for {code} must be one of "
+                             f"{list(SEVERITY_LEVELS)}, got {level!r}")
+    return tuple(pairs)

@@ -1,9 +1,14 @@
-"""Orchestrator: index → reachability → rules → waivers → report.
+"""Orchestrator: index → reachability → rules → waivers → severity → report.
 
 The full project index is always built (even under ``--changed``) so that
 cross-module jit reachability and import resolution stay whole-program;
 ``only_paths`` then filters which files may *report* findings.  Nothing in
 the audited tree is imported — see :mod:`repro.analysis.project`.
+
+Severity is assigned *after* waivers: every finding carries its configured
+level (``error``/``warn``/``info``), and :attr:`AnalysisReport.ok` gates on
+:func:`repro.analysis.findings.gating` — ``error`` always fails the run,
+``warn`` fails only under ``--strict`` (the CI mode), ``info`` never does.
 """
 from __future__ import annotations
 
@@ -13,11 +18,14 @@ from pathlib import Path
 from typing import List, Optional, Sequence, Tuple
 
 from .config import AnalysisConfig
-from .findings import Finding, apply_waivers, scan_waivers
+from .findings import Finding, apply_waivers, gating, scan_waivers
 from .project import ProjectIndex
 from .reachability import compute_reachable
+from .rules_donation import check_donation_rules
 from .rules_jax import check_jax_rules
 from .rules_pytree import check_pytree_rules
+from .rules_scan import check_scan_rules
+from .rules_sharding import check_sharding_rules
 from .rules_units import check_unit_rules
 
 
@@ -26,14 +34,19 @@ class AnalysisReport:
     findings: List[Finding]
     rules: Tuple[str, ...]
     files: List[str]                    # every file indexed
+    strict: bool = False
 
     @property
     def active(self) -> List[Finding]:
         return [f for f in self.findings if not f.waived]
 
     @property
+    def gating(self) -> List[Finding]:
+        return gating(self.findings, strict=self.strict)
+
+    @property
     def ok(self) -> bool:
-        return not self.active
+        return not self.gating
 
 
 def run_analysis(cfg: AnalysisConfig,
@@ -52,26 +65,37 @@ def run_analysis(cfg: AnalysisConfig,
 
     findings: List[Finding] = []
     jax_rules = [r for r in rules if r.startswith("JX")]
+    reach = None
+    if jax_rules or "SH001" in rules:
+        reach = compute_reachable(index)
     if jax_rules:
-        findings += check_jax_rules(compute_reachable(index), jax_rules)
+        findings += check_jax_rules(reach, jax_rules)
     if "PT001" in rules:
         findings += check_pytree_rules(index)
     if "UN001" in rules:
         findings += check_unit_rules(index, cfg)
+    if "SC001" in rules:
+        findings += check_scan_rules(index)
+    if "DN001" in rules:
+        findings += check_donation_rules(index)
+    if "SH001" in rules:
+        findings += check_sharding_rules(index, reach)
 
     if only_paths is not None:
         keep = {_norm(cfg.root, p) for p in only_paths}
         findings = [f for f in findings if f.path in keep]
 
     waivers = {mod.path: w for mod in index.modules.values()
-               if (w := scan_waivers(mod.source))}
+               if (w := scan_waivers(mod.source, mod.tree))}
     if only_paths is not None:
         keep = {_norm(cfg.root, p) for p in only_paths}
         waivers = {p: w for p, w in waivers.items() if p in keep}
     findings = apply_waivers(findings, waivers, strict=strict)
+    findings = [dataclasses.replace(f, severity=cfg.severity_for(f.code))
+                for f in findings]
     findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
     return AnalysisReport(findings=findings, rules=rules,
-                          files=sorted(index.by_path))
+                          files=sorted(index.by_path), strict=strict)
 
 
 def _norm(root: Path, path: str) -> str:
@@ -85,11 +109,16 @@ def _norm(root: Path, path: str) -> str:
 
 
 def changed_files(root: Path, base: str = "main") -> List[str]:
-    """Python files changed vs ``base`` (plus any uncommitted edits)."""
+    """Python files changed vs ``base`` (plus any uncommitted edits).
+
+    Rename-aware: ``git diff --name-status -M`` reports ``R<score>`` rows
+    with both paths — a pure rename (``R100``) is content-identical to a
+    file the base already linted, so it is skipped entirely; a rename with
+    edits lints the *new* path.  Deletions never lint.
+    """
     out: set = set()
-    for args in (["git", "diff", "--name-only", f"{base}...HEAD"],
-                 ["git", "diff", "--name-only", "HEAD"],
-                 ["git", "ls-files", "--others", "--exclude-standard"]):
+    for args in (["git", "diff", "--name-status", "-M", f"{base}...HEAD"],
+                 ["git", "diff", "--name-status", "-M", "HEAD"]):
         try:
             proc = subprocess.run(args, cwd=root, capture_output=True,
                                   text=True, check=False)
@@ -97,6 +126,37 @@ def changed_files(root: Path, base: str = "main") -> List[str]:
             continue
         if proc.returncode != 0:
             continue
-        out.update(line.strip() for line in proc.stdout.splitlines()
-                   if line.strip().endswith(".py"))
+        out.update(_parse_name_status(proc.stdout))
+    try:
+        proc = subprocess.run(
+            ["git", "ls-files", "--others", "--exclude-standard"],
+            cwd=root, capture_output=True, text=True, check=False)
+        if proc.returncode == 0:
+            out.update(line.strip() for line in proc.stdout.splitlines()
+                       if line.strip().endswith(".py"))
+    except OSError:
+        pass
     return sorted(out)
+
+
+def _parse_name_status(text: str) -> List[str]:
+    """``--name-status -M`` rows -> paths to lint (see changed_files)."""
+    paths: List[str] = []
+    for line in text.splitlines():
+        parts = line.rstrip("\n").split("\t")
+        if not parts or not parts[0]:
+            continue
+        status = parts[0]
+        if status.startswith("D"):
+            continue
+        if status.startswith(("R", "C")):
+            if len(parts) < 3:
+                continue
+            if status in ("R100", "C100"):
+                continue                 # content-identical to the base
+            path = parts[2]              # the new path carries the edits
+        else:
+            path = parts[-1]
+        if path.endswith(".py"):
+            paths.append(path)
+    return paths

@@ -15,6 +15,7 @@ cannot accumulate (DESIGN.md §12).
 """
 from __future__ import annotations
 
+import ast
 import dataclasses
 import json
 import re
@@ -28,6 +29,10 @@ WAIVER_RE = re.compile(
     r"(?P<codes>[A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)"
     r"\s*(?:--\s*(?P<reason>\S.*?))?\s*$")
 
+#: severity -> the word rendered in reports (and matched by the CI problem
+#: matcher / mapped to SARIF result levels)
+SEVERITY_WORD = {"error": "error", "warn": "warning", "info": "note"}
+
 
 @dataclasses.dataclass(frozen=True)
 class Finding:
@@ -37,13 +42,15 @@ class Finding:
     line: int                       # 1-based
     message: str
     col: int = 0
+    severity: str = "error"         # error | warn | info
     waived: bool = False
     waiver_reason: Optional[str] = None
 
     def render(self) -> str:
         tag = " (waived)" if self.waived else ""
-        return f"{self.path}:{self.line}:{self.col}: {self.code}{tag} " \
-               f"{self.message}"
+        word = SEVERITY_WORD.get(self.severity, self.severity)
+        return f"{self.path}:{self.line}:{self.col}: {self.code} " \
+               f"{word}{tag}: {self.message}"
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -56,12 +63,21 @@ class Waiver:
     line: int                       # the waiver comment's own line
 
 
-def scan_waivers(source: str) -> Dict[int, Waiver]:
+def scan_waivers(source: str,
+                 tree: Optional[ast.Module] = None) -> Dict[int, Waiver]:
     """Map *waived line number* -> :class:`Waiver` for one file.
 
     A waiver comment trailing code applies to its own line; a comment-only
     waiver line applies to itself and the following line (so long statements
-    can carry the waiver above them).
+    can carry the waiver above them).  When the parsed ``tree`` is supplied
+    two further forms resolve:
+
+    * a trailing waiver on a **continuation line** of a multi-line statement
+      also covers the statement's reporting line (its ``lineno``), so a
+      finding pinned to the statement start is still waivable in place;
+    * a standalone waiver above a **decorated def/class** also covers the
+      ``def``/``class`` line itself (the comment's "next line" is the first
+      decorator, but findings pin to the definition line).
     """
     out: Dict[int, Waiver] = {}
     for i, text in enumerate(source.splitlines(), start=1):
@@ -73,7 +89,38 @@ def scan_waivers(source: str) -> Dict[int, Waiver]:
         out[i] = w
         if text.lstrip().startswith("#"):      # standalone comment line
             out.setdefault(i + 1, w)
+            if tree is not None:
+                target = _decorated_def_line(tree, i + 1)
+                if target is not None:
+                    out.setdefault(target, w)
+        elif tree is not None:
+            start = _statement_start(tree, i)
+            if start is not None and start != i:
+                out.setdefault(start, w)
     return out
+
+
+def _decorated_def_line(tree: ast.Module, line: int) -> Optional[int]:
+    """The ``def``/``class`` line when ``line`` is its first decorator."""
+    for node in ast.walk(tree):
+        decs = getattr(node, "decorator_list", None)
+        if decs and decs[0].lineno == line:
+            return node.lineno
+    return None
+
+
+def _statement_start(tree: ast.Module, line: int) -> Optional[int]:
+    """Reporting line of the innermost statement spanning ``line``."""
+    best: Optional[int] = None
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.stmt):
+            continue
+        end = getattr(node, "end_lineno", None)
+        if end is None or not (node.lineno <= line <= end):
+            continue
+        if best is None or node.lineno > best:
+            best = node.lineno
+    return best
 
 
 def apply_waivers(findings: Sequence[Finding],
@@ -103,8 +150,16 @@ def apply_waivers(findings: Sequence[Finding],
 
 
 def active(findings: Sequence[Finding]) -> List[Finding]:
-    """Findings that still gate (not waived)."""
+    """Findings not silenced by a waiver (any severity)."""
     return [f for f in findings if not f.waived]
+
+
+def gating(findings: Sequence[Finding], strict: bool = False) \
+        -> List[Finding]:
+    """Active findings that fail the run: ``error`` always, ``warn`` only
+    under ``--strict`` (the CI mode), ``info`` never."""
+    levels = ("error", "warn") if strict else ("error",)
+    return [f for f in active(findings) if f.severity in levels]
 
 
 def render_report(findings: Sequence[Finding]) -> str:
@@ -112,7 +167,11 @@ def render_report(findings: Sequence[Finding]) -> str:
         findings, key=lambda f: (f.path, f.line, f.code))]
     act = active(findings)
     waived = len(findings) - len(act)
-    lines.append(f"{len(act)} finding(s), {waived} waived")
+    per_sev = {lvl: sum(1 for f in act if f.severity == lvl)
+               for lvl in ("error", "warn", "info")}
+    lines.append(f"{len(act)} finding(s) "
+                 f"({per_sev['error']} error, {per_sev['warn']} warn, "
+                 f"{per_sev['info']} info), {waived} waived")
     return "\n".join(lines)
 
 
@@ -121,13 +180,17 @@ def report_payload(findings: Sequence[Finding], **extra) -> Dict:
     per_code: Dict[str, int] = {}
     for f in active(findings):
         per_code[f.code] = per_code.get(f.code, 0) + 1
+    per_sev: Dict[str, int] = {}
+    for f in active(findings):
+        per_sev[f.severity] = per_sev.get(f.severity, 0) + 1
     payload = {
         "schema": REPORT_SCHEMA,
         "findings": [f.to_dict() for f in sorted(
             findings, key=lambda f: (f.path, f.line, f.code))],
         "summary": {"active": len(active(findings)),
                     "waived": len(findings) - len(active(findings)),
-                    "per_code": dict(sorted(per_code.items()))},
+                    "per_code": dict(sorted(per_code.items())),
+                    "per_severity": dict(sorted(per_sev.items()))},
     }
     payload.update(extra)
     return payload

@@ -1,0 +1,206 @@
+"""DN001 — use-after-donate on jitted call sites.
+
+``jax.jit(..., donate_argnums=/donate_argnames=)`` hands an argument's
+buffer to XLA: after the call the Python name still binds a deleted array,
+and the first later read raises ``RuntimeError: Array has been deleted`` —
+at runtime, on the accelerator, long after the lint-able mistake.  The §13
+chunk streamer's donated lane buffers rely on convention ("each chunk is
+freshly ``device_put``"); this rule makes the convention checkable.
+
+Pure AST: the rule collects donating callables (decorated defs and
+``jax.jit(f, donate_...)`` / ``functools.partial(jax.jit, donate_...)(f)``
+assignment forms), maps donated names to positions via the wrapped
+function's signature, then flags call sites where a donated bare-``Name``
+argument is read again later in the same function body — up to the name's
+first rebind, which refreshes the buffer.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding
+from .project import ModuleInfo, ProjectIndex, dotted_name
+
+_JIT_CALLS = ("jax.jit", "jax.api.jit", "jax.pjit", "jax.experimental.pjit")
+
+
+class _Donor:
+    """One donating callable: which positions/keywords are donated."""
+
+    def __init__(self, positions: Set[int], names: Set[str]):
+        self.positions = positions          # donated positional indices
+        self.names = names                  # donated keyword names
+
+
+def check_donation_rules(index: ProjectIndex) -> List[Finding]:
+    donors: Dict[str, _Donor] = {}
+    for mod in index.modules.values():
+        donors.update(_collect_donors(mod, index))
+    out: List[Finding] = []
+    for mod in index.modules.values():
+        out.extend(_check_calls(mod, donors))
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.message))
+    return out
+
+
+# -- donor collection --------------------------------------------------------
+
+def _donation_spec(call: ast.Call, mod: ModuleInfo) -> \
+        Optional[Tuple[Set[int], Set[str]]]:
+    """``(donate positions, donate names)`` of a jit(...) call, if any."""
+    positions: Set[int] = set()
+    names: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            for n in _int_items(kw.value):
+                positions.add(n)
+        elif kw.arg == "donate_argnames":
+            for s in _str_items(kw.value):
+                names.add(s)
+    return (positions, names) if positions or names else None
+
+
+def _int_items(node: ast.AST) -> List[int]:
+    items = node.elts if isinstance(node, (ast.Tuple, ast.List)) else [node]
+    return [n.value for n in items
+            if isinstance(n, ast.Constant) and isinstance(n.value, int)]
+
+
+def _str_items(node: ast.AST) -> List[str]:
+    items = node.elts if isinstance(node, (ast.Tuple, ast.List)) else [node]
+    return [n.value for n in items
+            if isinstance(n, ast.Constant) and isinstance(n.value, str)]
+
+
+def _positions_for(fn: ast.AST, spec: Tuple[Set[int], Set[str]],
+                   bound: int = 0) -> _Donor:
+    """Resolve donated argnames to positions via the wrapped signature.
+
+    ``bound`` positional args already supplied by ``functools.partial``
+    shift every caller-visible position left by that count.
+    """
+    positions = {p - bound for p in spec[0] if p >= bound}
+    names = set(spec[1])
+    params = [p.arg for p in (fn.args.posonlyargs + fn.args.args)]
+    for name in spec[1]:
+        if name in params:
+            pos = params.index(name) - bound
+            if pos >= 0:
+                positions.add(pos)
+    return _Donor(positions, names)
+
+
+def _collect_donors(mod: ModuleInfo, index: ProjectIndex) -> \
+        Dict[str, _Donor]:
+    """Map dotted callable name -> donation spec for this module."""
+    donors: Dict[str, _Donor] = {}
+
+    def jit_spec(call: ast.Call) -> Optional[Tuple[Set[int], Set[str]]]:
+        """Donation spec of ``jax.jit(...)`` or ``partial(jax.jit, ...)``."""
+        head = dotted_name(call.func, mod)
+        if head in _JIT_CALLS:
+            return _donation_spec(call, mod)
+        if head == "functools.partial" and call.args and \
+                dotted_name(call.args[0], mod) in _JIT_CALLS:
+            return _donation_spec(call, mod)
+        return None
+
+    for node in ast.walk(mod.tree):
+        # decorated defs: @jax.jit(...) / @functools.partial(jax.jit, ...)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call):
+                    spec = jit_spec(dec)
+                    if spec is not None:
+                        donors[f"{mod.module}.{node.name}"] = \
+                            _positions_for(node, spec)
+        # assignment forms: g = jax.jit(f, donate_...=...)
+        #                   g = functools.partial(jax.jit, donate_...)(f)
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name) and \
+                isinstance(node.value, ast.Call):
+            call = node.value
+            fn_expr: Optional[ast.AST] = None
+            spec = None
+            head = dotted_name(call.func, mod)
+            if head in _JIT_CALLS and call.args:
+                spec = _donation_spec(call, mod)
+                fn_expr = call.args[0]
+            elif isinstance(call.func, ast.Call):
+                spec = jit_spec(call.func)
+                if spec is not None and call.args:
+                    fn_expr = call.args[0]
+            if spec is None or fn_expr is None:
+                continue
+            fn_dotted = dotted_name(fn_expr, mod)
+            hit = index.resolve_function(fn_dotted) if fn_dotted else None
+            if hit is not None:
+                donors[f"{mod.module}.{node.targets[0].id}"] = \
+                    _positions_for(hit[1], spec)
+    return donors
+
+
+# -- call-site checking ------------------------------------------------------
+
+def _check_calls(mod: ModuleInfo, donors: Dict[str, _Donor]) \
+        -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = dotted_name(node.func, mod)
+        donor = donors.get(dotted or "")
+        if donor is None:
+            continue
+        fn = mod.enclosing_function(node)
+        if fn is None or isinstance(fn, ast.Lambda):
+            continue
+        donated = _donated_names(node, donor)
+        for arg_name in sorted(donated):
+            read = _read_after(fn, arg_name, node.lineno)
+            if read is not None:
+                short = (dotted or "").rsplit(".", 1)[-1]
+                out.append(Finding(
+                    code="DN001", path=mod.path, line=read.lineno,
+                    col=read.col_offset,
+                    message=f"`{arg_name}` was donated to `{short}` on "
+                            f"line {node.lineno} (donate_argnums/argnames) "
+                            f"and is read again here — the buffer may "
+                            f"already be deleted; re-device_put or drop "
+                            f"the donation"))
+    return out
+
+
+def _donated_names(call: ast.Call, donor: _Donor) -> Set[str]:
+    names: Set[str] = set()
+    for i, a in enumerate(call.args):
+        if i in donor.positions and isinstance(a, ast.Name):
+            names.add(a.id)
+    for kw in call.keywords:
+        if kw.arg in donor.names and isinstance(kw.value, ast.Name):
+            names.add(kw.value.id)
+    return names
+
+
+def _read_after(fn: ast.AST, name: str, call_line: int) \
+        -> Optional[ast.Name]:
+    """First ``Load`` of ``name`` after ``call_line`` and before the name is
+    rebound (a rebind refreshes the buffer, ending the hazard window)."""
+    rebind_line = None
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Name) and n.id == name and \
+                isinstance(n.ctx, (ast.Store, ast.Del)) and \
+                n.lineno > call_line:
+            if rebind_line is None or n.lineno < rebind_line:
+                rebind_line = n.lineno
+    best: Optional[ast.Name] = None
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Name) and n.id == name and \
+                isinstance(n.ctx, ast.Load) and n.lineno > call_line:
+            if rebind_line is not None and n.lineno >= rebind_line:
+                continue
+            if best is None or (n.lineno, n.col_offset) < \
+                    (best.lineno, best.col_offset):
+                best = n
+    return best

@@ -1,0 +1,362 @@
+"""SC001 — scan-carry stability across ``lax.scan``/``while_loop``/``fori_loop``.
+
+A loop body traced by JAX must return a carry with the *same pytree
+structure and dtypes* as the one it received, or tracing fails with an
+opaque structure-mismatch error — and some divergences (weak-type
+promotion) slip through tracing only to recompile per call.  The exact bug
+classes the §7 epoch scan and §11 telemetry replay are hand-audited
+against are checked statically here:
+
+* **arity** — the body unpacks an N-tuple carry (or the call site's init is
+  an N-tuple literal) but returns an M-tuple carry, M ≠ N; a ``lax.scan``
+  body returning anything but a ``(carry, ys)`` pair is the degenerate
+  case.
+* **element order** — the returned carry tuple is exactly the unpacked
+  carry names in a different order: structure-compatible, silently wrong.
+* **dtype** — an integer-initialised carry element flows through ``/``
+  (true division) or ``jnp.mean`` (both promote to float), or an
+  ``astype`` whose target dtype-kind differs from the init literal's;
+  with multiple ``return`` statements, an ``astype`` applied on one path
+  but not another.
+
+Everything is best-effort pure AST: carries that are dicts, dataclasses or
+opaque call results are skipped, never guessed at.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+from .findings import Finding
+from .project import ModuleInfo, ProjectIndex, dotted_name
+
+#: canonical loop entry -> (body argument position, init argument position)
+_LOOP_CALLS: Dict[str, Tuple[int, int]] = {
+    "jax.lax.scan": (0, 1),
+    "jax.lax.while_loop": (1, 2),
+    "jax.lax.fori_loop": (2, 3),
+}
+
+#: carry parameter index within the body signature (before partial binding)
+_CARRY_PARAM = {"jax.lax.scan": 0, "jax.lax.while_loop": 0,
+                "jax.lax.fori_loop": 1}
+
+_MEAN_CALLS = ("jax.numpy.mean", "numpy.mean", "jax.numpy.average",
+               "numpy.average")
+
+
+def check_scan_rules(index: ProjectIndex) -> List[Finding]:
+    raw: List[Finding] = []
+    for mod in index.modules.values():
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = dotted_name(node.func, mod)
+            spec = _LOOP_CALLS.get(dotted or "")
+            if spec is None:
+                continue
+            body_pos, init_pos = spec
+            if body_pos >= len(node.args):
+                continue
+            init = node.args[init_pos] if init_pos < len(node.args) else None
+            for body_mod, fn, bound in _resolve_body(
+                    node.args[body_pos], mod, index):
+                raw.extend(_check_body(dotted, node, init, mod,
+                                       body_mod, fn, bound))
+    seen, out = set(), []
+    for f in sorted(raw, key=lambda f: (f.path, f.line, f.col, f.message)):
+        key = (f.path, f.line, f.message)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out
+
+
+# -- body resolution ---------------------------------------------------------
+
+def _resolve_body(expr: ast.AST, mod: ModuleInfo, index: ProjectIndex,
+                  bound: int = 0) -> List[Tuple[ModuleInfo, ast.AST, int]]:
+    """Resolve a loop-body expression to ``(module, fn node, bound args)``.
+
+    ``functools.partial(f, a, b)`` shifts the carry parameter right by the
+    number of bound positional arguments.
+    """
+    if isinstance(expr, ast.Lambda):
+        return [(mod, expr, bound)]
+    if isinstance(expr, ast.Call):
+        if dotted_name(expr.func, mod) == "functools.partial" and expr.args:
+            return _resolve_body(expr.args[0], mod, index,
+                                 bound + len(expr.args) - 1)
+        return []
+    if isinstance(expr, ast.Name):
+        scope = mod.enclosing_function(expr)
+        while scope is not None:
+            for n in ast.walk(scope):
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and n is not scope and n.name == expr.id:
+                    return [(mod, n, bound)]
+            scope = mod.enclosing_function(scope)
+    if isinstance(expr, (ast.Name, ast.Attribute)):
+        dotted = dotted_name(expr, mod)
+        if dotted:
+            hit = index.resolve_function(dotted)
+            if hit is not None:
+                return [(hit[0], hit[1], bound)]
+    return []
+
+
+def _walk_own(fn: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function body without descending into nested defs/lambdas."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _carry_param_name(fn: ast.AST, kind: str, bound: int) -> Optional[str]:
+    args = fn.args
+    params = [p.arg for p in (args.posonlyargs + args.args)]
+    idx = bound + _CARRY_PARAM[kind]
+    return params[idx] if idx < len(params) else None
+
+
+def _returned_carries(fn: ast.AST, kind: str, display: str,
+                      mod: ModuleInfo) -> Tuple[List[Finding],
+                                                List[Tuple[int, ast.AST]]]:
+    """``(pair findings, [(line, carry expr)])`` per ``return`` statement."""
+    findings: List[Finding] = []
+    carries: List[Tuple[int, ast.AST]] = []
+    if isinstance(fn, ast.Lambda):
+        values: List[Tuple[int, ast.AST]] = [(fn.body.lineno, fn.body)]
+    else:
+        values = [(n.lineno, n.value) for n in _walk_own(fn)
+                  if isinstance(n, ast.Return) and n.value is not None]
+    for line, value in values:
+        if kind == "jax.lax.scan":
+            if not isinstance(value, ast.Tuple):
+                continue                       # opaque pair: nothing to check
+            if len(value.elts) != 2:
+                findings.append(Finding(
+                    code="SC001", path=mod.path, line=line,
+                    col=value.col_offset,
+                    message=f"scan body `{display}` must return a "
+                            f"(carry, ys) pair; got a "
+                            f"{len(value.elts)}-tuple"))
+                continue
+            carries.append((line, value.elts[0]))
+        else:
+            carries.append((line, value))
+    return findings, carries
+
+
+# -- dtype classification ----------------------------------------------------
+
+def _dtype_kind_of_name(dotted: Optional[str]) -> Optional[str]:
+    """``jax.numpy.int32`` -> "int", ``numpy.float32`` -> "float", …"""
+    if not dotted:
+        return None
+    leaf = dotted.rsplit(".", 1)[-1]
+    if leaf.startswith(("int", "uint")) or leaf == "bool_":
+        return "int"
+    if leaf.startswith(("float", "bfloat", "half", "double")):
+        return "float"
+    return None
+
+
+def _init_kind(expr: Optional[ast.AST], mod: ModuleInfo) -> Optional[str]:
+    """Best-effort dtype kind ("int"/"float") of an init-literal element."""
+    if expr is None:
+        return None
+    if isinstance(expr, ast.Constant):
+        if isinstance(expr.value, bool):
+            return None
+        if isinstance(expr.value, int):
+            return "int"
+        if isinstance(expr.value, float):
+            return "float"
+        return None
+    if isinstance(expr, ast.UnaryOp):
+        return _init_kind(expr.operand, mod)
+    if not isinstance(expr, ast.Call):
+        return None
+    dotted = dotted_name(expr.func, mod) or ""
+    kind = _dtype_kind_of_name(dotted)
+    if kind is not None:                     # jnp.int32(0), np.float32(x)
+        return kind
+    leaf = dotted.rsplit(".", 1)[-1]
+    if dotted.startswith(("jax.numpy.", "numpy.")) and \
+            leaf in ("zeros", "ones", "full", "asarray", "array",
+                     "full_like", "zeros_like", "ones_like", "empty"):
+        dt = None
+        for kw in expr.keywords:
+            if kw.arg == "dtype":
+                dt = kw.value
+        if dt is None and leaf in ("zeros", "ones", "full", "asarray",
+                                   "array") and len(expr.args) >= 2:
+            cand = expr.args[-1]
+            if _dtype_kind_of_name(dotted_name(cand, mod)):
+                dt = cand
+        if dt is not None:
+            return _dtype_kind_of_name(dotted_name(dt, mod))
+        return "float" if leaf in ("zeros", "ones", "empty") else None
+    if dotted in ("jax.numpy.arange", "numpy.arange"):
+        for kw in expr.keywords:
+            if kw.arg == "dtype":
+                return _dtype_kind_of_name(dotted_name(kw.value, mod))
+        if all(isinstance(a, ast.Constant) and isinstance(a.value, int)
+               for a in expr.args):
+            return "int"
+    return None
+
+
+def _names_in(expr: ast.AST) -> set:
+    return {n.id for n in ast.walk(expr) if isinstance(n, ast.Name)}
+
+
+def _has_true_div(expr: ast.AST, names: set) -> bool:
+    for n in ast.walk(expr):
+        if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Div):
+            if not names or (_names_in(n) & names):
+                return True
+    return False
+
+
+def _mean_call(expr: ast.AST, mod: ModuleInfo) -> Optional[str]:
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Call):
+            d = dotted_name(n.func, mod)
+            if d in _MEAN_CALLS:
+                return d
+    return None
+
+
+def _astype_target(expr: ast.AST, mod: ModuleInfo) -> Optional[str]:
+    """Dtype kind of a top-level ``<x>.astype(T)`` expression, "" unknown."""
+    if isinstance(expr, ast.Call) and isinstance(expr.func, ast.Attribute) \
+            and expr.func.attr == "astype" and expr.args:
+        return _dtype_kind_of_name(dotted_name(expr.args[0], mod)) or ""
+    return None
+
+
+# -- the per-body check ------------------------------------------------------
+
+def _check_body(kind: str, call: ast.Call, init: Optional[ast.AST],
+                call_mod: ModuleInfo, body_mod: ModuleInfo, fn: ast.AST,
+                bound: int) -> List[Finding]:
+    out: List[Finding] = []
+    display = fn.name if isinstance(fn, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)) \
+        else f"<lambda:L{fn.lineno}>"
+
+    pair_findings, carries = _returned_carries(fn, kind, display, body_mod)
+    out.extend(pair_findings)
+
+    carry_name = _carry_param_name(fn, kind, bound)
+
+    # input carry shape: the body's own tuple unpack wins, else the call
+    # site's init literal
+    unpack_names: Optional[List[str]] = None
+    if carry_name is not None and not isinstance(fn, ast.Lambda):
+        for n in _walk_own(fn):
+            if isinstance(n, ast.Assign) and len(n.targets) == 1 \
+                    and isinstance(n.targets[0], ast.Tuple) \
+                    and isinstance(n.value, ast.Name) \
+                    and n.value.id == carry_name:
+                elts = n.targets[0].elts
+                if all(isinstance(e, ast.Name) for e in elts):
+                    unpack_names = [e.id for e in elts]
+                break
+
+    init_elts: Optional[Sequence[ast.AST]] = None
+    if isinstance(init, (ast.Tuple, ast.List)):
+        init_elts = init.elts
+    in_arity = len(unpack_names) if unpack_names is not None else \
+        (len(init_elts) if init_elts is not None else None)
+
+    def emit(line: int, col: int, msg: str) -> None:
+        out.append(Finding(code="SC001", path=body_mod.path, line=line,
+                           col=col, message=msg))
+
+    astype_by_pos: Dict[int, set] = {}
+    for line, carry in carries:
+        if not isinstance(carry, ast.Tuple):
+            # single-leaf carry: dtype checks against a non-tuple init
+            if init_elts is None and in_arity is None:
+                _check_elt_dtype(kind, display, carry_name, init, carry,
+                                 line, body_mod, call_mod, None, emit)
+            continue
+        elts = carry.elts
+        if in_arity is not None and len(elts) != in_arity:
+            src = "unpacked in the body" if unpack_names is not None \
+                else "initialised at the call site"
+            emit(line, carry.col_offset,
+                 f"loop body `{display}` carry arity diverges: "
+                 f"{in_arity} element(s) {src}, {len(elts)} returned — "
+                 f"the carry pytree must be stable across iterations")
+            continue
+        if unpack_names is not None \
+                and all(isinstance(e, ast.Name) for e in elts):
+            ret_names = [e.id for e in elts]
+            if ret_names != unpack_names and \
+                    sorted(ret_names) == sorted(unpack_names):
+                emit(line, carry.col_offset,
+                     f"loop body `{display}` returns the carry elements "
+                     f"reordered ({', '.join(ret_names)}) vs the input "
+                     f"unpack ({', '.join(unpack_names)})")
+        for i, e in enumerate(elts):
+            at = _astype_target(e, body_mod)
+            if at is not None:
+                astype_by_pos.setdefault(i, set()).add(line)
+            init_e = init_elts[i] if init_elts is not None and \
+                i < len(init_elts) else None
+            name = unpack_names[i] if unpack_names is not None else None
+            _check_elt_dtype(kind, display, name, init_e, e, line,
+                             body_mod, call_mod, i, emit)
+
+    # an astype applied on one return path but not the other(s) diverges the
+    # carry dtype between branches
+    n_tuple_returns = sum(1 for _, c in carries if isinstance(c, ast.Tuple))
+    if n_tuple_returns > 1:
+        for i, at_lines in sorted(astype_by_pos.items()):
+            if len(at_lines) < n_tuple_returns:
+                emit(max(at_lines), 0,
+                     f"loop body `{display}` applies `.astype` to carry "
+                     f"element {i} on {len(at_lines)} of "
+                     f"{n_tuple_returns} return paths — the carry dtype "
+                     f"diverges between branches")
+    return out
+
+
+def _check_elt_dtype(kind: str, display: str, name: Optional[str],
+                     init_e: Optional[ast.AST], ret_e: ast.AST, line: int,
+                     body_mod: ModuleInfo, call_mod: ModuleInfo,
+                     pos: Optional[int], emit) -> None:
+    init_kind = _init_kind(init_e, call_mod)
+    label = f"carry element {pos}" if pos is not None else "the carry"
+    who = f" `{name}`" if name else ""
+    if init_kind == "int":
+        names = {name} if name else set()
+        if _has_true_div(ret_e, names):
+            emit(line, ret_e.col_offset,
+                 f"loop body `{display}`: true division promotes the "
+                 f"int-initialised {label}{who} to float — the output "
+                 f"carry dtype diverges from the init (use `//` or a "
+                 f"float init)")
+            return
+        mean = _mean_call(ret_e, body_mod)
+        if mean is not None:
+            emit(line, ret_e.col_offset,
+                 f"loop body `{display}`: `{mean}` promotes the "
+                 f"int-initialised {label}{who} to float — the output "
+                 f"carry dtype diverges from the init")
+            return
+    at = _astype_target(ret_e, body_mod)
+    if at and init_kind is not None and at != init_kind:
+        emit(line, ret_e.col_offset,
+             f"loop body `{display}`: {label}{who} is returned as "
+             f"`.astype(<{at}>)` but initialised {init_kind} at the call "
+             f"site — the carry dtype diverges from the init")

@@ -1,0 +1,107 @@
+"""SH001 — lane-sharding contracts (DESIGN.md §13).
+
+The sweep's sharded execution has three conventions this rule makes
+checkable:
+
+* **leading lane axis** — the stacked ``SimTables``/``GovernorPolicy``
+  leaves shard along their *leading* axis (``PartitionSpec("lanes")``); a
+  ``PartitionSpec`` that names the lane axis at a non-leading position
+  splits a per-lane tensor *inside* a lane, which is never what the
+  independent-lane contract means.
+* **no ``device_put`` under trace** — ``jax.device_put`` inside a
+  jit-reachable body is a host placement op captured into the program; the
+  streamer must place chunks *before* entering the compiled program.
+* **no mesh construction under trace** — ``jax.sharding.Mesh`` /
+  ``jax.make_mesh`` / ``mesh_utils.create_device_mesh`` enumerate devices,
+  a host-only effect that silently bakes the tracing machine's topology
+  into the compiled program.
+
+The first check is module-wide over the whole index (a wrong
+``PartitionSpec`` is wrong wherever it is written); the trace checks run
+only over the jit-reachable unit set.  These are placement-convention
+heuristics, so SH001 defaults to ``warn`` severity (gates only under
+``--strict``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from .findings import Finding
+from .project import ModuleInfo, ProjectIndex, dotted_name
+from .reachability import ReachableSet
+
+#: the lane axis name used by ``repro.sharding`` (DESIGN.md §13)
+LANE_AXIS = "lanes"
+
+_PSPEC = ("jax.sharding.PartitionSpec", "jax.interpreters.pxla.PartitionSpec")
+_DEVICE_PUT = ("jax.device_put", "jax.device_put_replicated",
+               "jax.device_put_sharded")
+_MESH_CTORS = ("jax.sharding.Mesh", "jax.make_mesh",
+               "jax.experimental.mesh_utils.create_device_mesh")
+
+
+def check_sharding_rules(index: ProjectIndex,
+                         reach: ReachableSet) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in index.modules.values():
+        out.extend(_check_pspec_literals(mod))
+    for unit in reach:
+        for node in ast.walk(unit.node):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = dotted_name(node.func, unit.mod)
+            if dotted in _DEVICE_PUT:
+                out.append(Finding(
+                    code="SH001", path=unit.mod.path, line=node.lineno,
+                    col=node.col_offset,
+                    message=f"`{dotted}` inside jit-reachable "
+                            f"`{unit.name}` — device placement is a host "
+                            f"op; place buffers before entering the "
+                            f"compiled program"))
+            elif dotted in _MESH_CTORS:
+                out.append(Finding(
+                    code="SH001", path=unit.mod.path, line=node.lineno,
+                    col=node.col_offset,
+                    message=f"`{dotted}` constructs a mesh inside "
+                            f"jit-reachable `{unit.name}` — device "
+                            f"enumeration is host-only and bakes the "
+                            f"tracing machine's topology into the "
+                            f"compiled program"))
+    dedup, final = set(), []
+    for f in sorted(out, key=lambda f: (f.path, f.line, f.col, f.message)):
+        key = (f.path, f.line, f.message)
+        if key not in dedup:
+            dedup.add(key)
+            final.append(f)
+    return final
+
+
+def _check_pspec_literals(mod: ModuleInfo) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if dotted_name(node.func, mod) not in _PSPEC:
+            continue
+        pos = _lane_axis_position(node)
+        if pos is not None and pos > 0:
+            out.append(Finding(
+                code="SH001", path=mod.path, line=node.lineno,
+                col=node.col_offset,
+                message=f"PartitionSpec names the lane axis "
+                        f"{LANE_AXIS!r} at position {pos} — stacked lane "
+                        f"leaves shard along their leading axis "
+                        f"(PartitionSpec({LANE_AXIS!r}), DESIGN.md §13)"))
+    return out
+
+
+def _lane_axis_position(call: ast.Call) -> Optional[int]:
+    for i, a in enumerate(call.args):
+        if isinstance(a, ast.Constant) and a.value == LANE_AXIS:
+            return i
+        if isinstance(a, (ast.Tuple, ast.List)):
+            for e in a.elts:
+                if isinstance(e, ast.Constant) and e.value == LANE_AXIS:
+                    return i
+    return None

@@ -8,17 +8,23 @@ payloads feed the run manifests), must either end in an accepted unit
 suffix (``_us``, ``_j``, …) or match a dimensionless allow pattern
 (``util*``, ``*_idx``, ``num_*``, …).  Integer-annotated fields are exempt —
 counts and indices carry no unit.
+
+:func:`unit_violations` exposes the raw violations (struct, node, kind) so
+the ``--fix`` engine (:mod:`repro.analysis.fix`) can mechanically apply the
+rename the finding message suggests; :func:`check_unit_rules` renders the
+same violations as findings.
 """
 from __future__ import annotations
 
 import ast
+import dataclasses
 import fnmatch
 import re
-from typing import List, Optional
+from typing import Iterator, List, Optional
 
 from .config import AnalysisConfig
 from .findings import Finding
-from .project import ProjectIndex
+from .project import ModuleInfo, ProjectIndex
 
 _NUMERIC_ANN = re.compile(r"\bfloat\b|ndarray|\bArray\b|jnp\.|\bcomplex\b")
 
@@ -43,38 +49,56 @@ def _name_ok(name: str, cfg: AnalysisConfig) -> bool:
     return any(fnmatch.fnmatchcase(name, pat) for pat in cfg.unit_allow)
 
 
-def check_unit_rules(index: ProjectIndex,
-                     cfg: AnalysisConfig) -> List[Finding]:
-    out: List[Finding] = []
-    suffixes = ", ".join(cfg.unit_suffixes)
+@dataclasses.dataclass(frozen=True)
+class UnitViolation:
+    """One suffix-less name on a unit struct, addressable for ``--fix``."""
+    mod: ModuleInfo
+    cls: ast.ClassDef
+    kind: str                   # "field" | "dict_key"
+    node: ast.AST               # AnnAssign (field) / Constant / keyword
+    name: str
+    method: Optional[str] = None   # enclosing method for dict keys
+
+
+def unit_violations(index: ProjectIndex,
+                    cfg: AnalysisConfig) -> Iterator[UnitViolation]:
     for mod in index.modules.values():
         for cls in mod.classes.values():
             if cls.name not in cfg.unit_structs:
                 continue
             if not _is_dataclass_like(cls):
                 continue
-
-            def emit(node: ast.AST, what: str, name: str) -> None:
-                out.append(Finding(
-                    code="UN001", path=mod.path, line=node.lineno,
-                    col=node.col_offset,
-                    message=f"{what} `{name}` on `{cls.name}` lacks a unit "
-                            f"suffix ({suffixes}); rename (e.g. "
-                            f"`{name}_us`) or add an `unit-allow` pattern"))
-
             for stmt in cls.body:
                 if isinstance(stmt, ast.AnnAssign) and \
                         isinstance(stmt.target, ast.Name):
                     ann = ast.unparse(stmt.annotation)
                     if _looks_numeric(ann) and \
                             not _name_ok(stmt.target.id, cfg):
-                        emit(stmt, "numeric field", stmt.target.id)
+                        yield UnitViolation(mod=mod, cls=cls, kind="field",
+                                            node=stmt, name=stmt.target.id)
                 elif isinstance(stmt, (ast.FunctionDef,
                                        ast.AsyncFunctionDef)):
                     for key_node, key in _dict_keys(stmt):
                         if not _name_ok(key, cfg):
-                            emit(key_node, f"dict key (in "
-                                           f"`{stmt.name}()`)", key)
+                            yield UnitViolation(mod=mod, cls=cls,
+                                                kind="dict_key",
+                                                node=key_node, name=key,
+                                                method=stmt.name)
+
+
+def check_unit_rules(index: ProjectIndex,
+                     cfg: AnalysisConfig) -> List[Finding]:
+    out: List[Finding] = []
+    suffixes = ", ".join(cfg.unit_suffixes)
+    for v in unit_violations(index, cfg):
+        what = "numeric field" if v.kind == "field" else \
+            f"dict key (in `{v.method}()`)"
+        out.append(Finding(
+            code="UN001", path=v.mod.path, line=v.node.lineno,
+            col=v.node.col_offset,
+            message=f"{what} `{v.name}` on `{v.cls.name}` lacks a unit "
+                    f"suffix ({suffixes}); rename (e.g. "
+                    f"`{v.name}_us`) or add an `unit-allow` pattern"))
     return out
 
 

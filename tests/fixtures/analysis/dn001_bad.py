@@ -1,0 +1,44 @@
+"""DN001 fixtures — reads after donation (all bad)."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnames=("buf",))
+def consume(buf, scale):
+    return buf * scale
+
+
+def stream(buf, scale):
+    out = consume(buf, scale)
+    total = buf.sum()                        # line 14: DN001 read after donate
+    return out, total
+
+
+def stream_kw(b, s):
+    out = consume(buf=b, scale=s)
+    return out + b                           # line 20: DN001 read after donate
+
+
+def _accumulate(acc, x):
+    return acc + x
+
+
+step = jax.jit(_accumulate, donate_argnums=(0,))
+
+
+def run(acc, xs):
+    acc2 = step(acc, xs)
+    return acc2 + acc                        # line 32: DN001 read after donate
+
+
+def _grid(tables, gov):
+    return tables + gov
+
+
+_chunk = functools.partial(jax.jit, donate_argnames=("tables",))(_grid)
+
+
+def launch(tables, gov):
+    r = _chunk(tables, gov)
+    return r + tables                        # line 44: DN001 read after donate

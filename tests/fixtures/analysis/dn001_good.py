@@ -1,0 +1,33 @@
+"""DN001 fixtures — donation used correctly (all good)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, donate_argnames=("buf",))
+def consume(buf, scale):
+    return buf * scale
+
+
+def stream(chunks, scale):
+    total = jnp.zeros(())
+    for piece in chunks:
+        out = consume(jnp.asarray(piece), scale)  # fresh buffer per call
+        total = total + out.sum()
+    return total
+
+
+def refresh(buf, scale):
+    out = consume(buf, scale)
+    buf = jnp.zeros_like(out)                # rebind refreshes the buffer
+    return out + buf
+
+
+def untouched(buf, scale):
+    pre = buf.sum()                          # read before the donation
+    return consume(buf, scale) + pre
+
+
+def kept(buf, scale):
+    return consume(buf, scale=scale)         # scale is not donated

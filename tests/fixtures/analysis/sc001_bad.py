@@ -1,0 +1,70 @@
+"""SC001 fixtures — unstable loop carries (all bad)."""
+import jax
+import jax.numpy as jnp
+
+
+def triple_body(carry, x):
+    return carry, x, x                      # line 7: SC001 not a (carry, ys) pair
+
+
+def scan_triple(xs):
+    return jax.lax.scan(triple_body, jnp.zeros(()), xs)
+
+
+def grow_body(carry, x):
+    a, b = carry
+    return (a, b, x), None                  # line 16: SC001 arity 2 -> 3
+
+
+def scan_grow(xs):
+    return jax.lax.scan(grow_body, (jnp.zeros(()), jnp.zeros(())), xs)
+
+
+def swap_body(carry, x):
+    a, b = carry
+    return (b, a), x                        # line 25: SC001 reordered carry
+
+
+def scan_swap(xs):
+    return jax.lax.scan(swap_body, (jnp.zeros(()), jnp.zeros(())), xs)
+
+
+def div_body(carry):
+    i, acc = carry
+    return (i / 2, acc + 1)                 # line 34: SC001 true division on int carry
+
+
+def count_down(x):
+    return jax.lax.while_loop(lambda c: c[0] > 0, div_body, (8, x))
+
+
+def mean_body(carry, x):
+    acc, n = carry
+    return (jnp.mean(acc), n), x            # line 43: SC001 jnp.mean on int carry
+
+
+def scan_mean(xs):
+    return jax.lax.scan(mean_body,
+                        (jnp.zeros((4,), dtype=jnp.int32), jnp.zeros(())),
+                        xs)
+
+
+def cast_body(carry):
+    v, y = carry
+    return (v.astype(jnp.int32), y)         # line 54: SC001 astype int vs float init
+
+
+def cast_loop(x):
+    return jax.lax.while_loop(lambda c: c[1] > 0, cast_body,
+                              (jnp.float32(0.0), x))
+
+
+def branchy_body(idx, carry):
+    a, b = carry
+    if idx > 3:
+        return (a.astype(jnp.float32), b)   # line 65: SC001 astype on 1 of 2 paths
+    return (a, b)
+
+
+def fori_branchy(a0, b0):
+    return jax.lax.fori_loop(0, 10, branchy_body, (a0, b0))

@@ -1,0 +1,67 @@
+"""SC001 fixtures — stable loop carries (all good)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def dict_body(state, _):
+    out = {"t_us": state["t_us"] + 1.0, "e_j": state["e_j"]}
+    return out, None
+
+
+def scan_dict(xs):
+    return jax.lax.scan(dict_body, {"t_us": 0.0, "e_j": 0.0}, xs)
+
+
+def floor_body(carry):
+    i, acc = carry
+    return (i // 2, acc + 1)                 # floor division keeps int
+
+
+def halve(x):
+    return jax.lax.while_loop(lambda c: c[0] > 0, floor_body, (8, x))
+
+
+def float_div_body(carry, x):
+    t, e = carry
+    return (t / 2.0, e), x                   # float init: division is fine
+
+
+def scan_float(xs):
+    return jax.lax.scan(float_div_body, (jnp.zeros(()), jnp.zeros(())), xs)
+
+
+def sym_body(idx, carry):
+    a, b = carry
+    if idx > 3:
+        return (a.astype(jnp.float32), b)
+    return (a.astype(jnp.float32), b)        # astype on every path: stable
+
+
+def fori_sym(a0, b0):
+    return jax.lax.fori_loop(0, 10, sym_body, (a0, b0))
+
+
+def windowed(tables, carry):
+    lo, hi, t, e = carry
+    return (lo + 1, hi, t, e)
+
+
+def advance(tables, x):
+    return jax.lax.while_loop(
+        lambda c: c[0] < c[1],
+        functools.partial(windowed, tables),  # bound arg shifts the carry
+        (0, 4, x, x))
+
+
+def _step(state):
+    return {"t_us": state["t_us"] + 1.0}
+
+
+def opaque_body(state, _):
+    return _step(state), None                # opaque carry: never guessed at
+
+
+def scan_opaque(xs):
+    return jax.lax.scan(opaque_body, {"t_us": 0.0}, xs)

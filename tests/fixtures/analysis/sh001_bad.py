@@ -1,0 +1,23 @@
+"""SH001 fixtures — sharding contract violations (all bad)."""
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+BAD_SPEC = P("model", "lanes")               # line 6: SH001 lane axis trailing
+
+
+def tucked(mesh):
+    return NamedSharding(mesh, P(None, "lanes"))   # line 10: SH001
+
+
+@jax.jit
+def place_inside(x):
+    y = jax.device_put(x)                    # line 15: SH001 device_put in jit
+    return y * 2
+
+
+@jax.jit
+def mesh_inside(x):
+    mesh = Mesh(jax.devices(), ("lanes",))   # line 21: SH001 mesh under trace
+    del mesh
+    return x

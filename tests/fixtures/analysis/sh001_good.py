@@ -1,0 +1,21 @@
+"""SH001 fixtures — sharding contracts honored (all good)."""
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+LANE_SPEC = P("lanes")                       # leading lane axis
+
+
+def make_lane_mesh():
+    return Mesh(jax.devices(), ("lanes",))   # host-side mesh construction
+
+
+def place(tree, mesh):
+    sharding = NamedSharding(mesh, P("lanes"))
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, sharding), tree)
+
+
+@jax.jit
+def grid(x):
+    return x * 2
