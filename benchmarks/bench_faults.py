@@ -1,0 +1,102 @@
+"""Fail-stop fault lanes (DESIGN.md §14): the cost of resilience sweeps.
+
+One design/trace grid run three ways — fault-free baseline, a k-PE-loss
+fault lane axis vmapped through the fail-stop kernel, and the same faulted
+grid streamed in chunks — so every PR benchmarks (a) the faulted kernel's
+warm throughput against the fault-free program it extends, (b) the no-op
+contract (an all-``inf`` fault axis reuses the fault-free program, zero
+extra compiles — the CC001 gate reads the counters emitted here), and
+(c) the degraded-mode makespan spread the resilience metric ranks designs
+by.
+
+``python -m benchmarks.bench_faults [--smoke] [--json PATH]`` runs this
+module alone and optionally dumps the rows + run manifest as JSON (the CI
+perf artifact).
+"""
+from __future__ import annotations
+
+from ._devices import apply_devices_flag
+
+apply_devices_flag()  # --devices N: sets XLA_FLAGS before the first jax use
+
+import numpy as np
+
+from repro.obs import bench_cli, scaled, timer
+from repro.scenario import FaultSpec, Scenario, TraceSpec, pe_loss_faults, sweep
+
+POLICY = "etf"
+NUM_SEEDS = 4
+NUM_JOBS = 64
+FAULT_TIME_US = 400.0
+
+
+def run(smoke: bool = False):
+    seeds = tuple(range(scaled(NUM_SEEDS, 2, smoke)))
+    num_jobs = scaled(NUM_JOBS, 16, smoke)
+    scn = Scenario(apps=("wifi_tx",), scheduler=POLICY,
+                   trace=TraceSpec(rate_jobs_per_ms=20.0,
+                                   num_jobs=num_jobs))
+    num_pes = scn.design.num_pes
+    # every 1-PE loss plus the fault-free lane: F = P + 1 lanes
+    lanes = ((),) + pe_loss_faults(range(num_pes),
+                                   fail_time_us=FAULT_TIME_US, k=1)
+    noop_lanes = [(), (FaultSpec(0, float("inf")),)]
+
+    rows = []
+    results = {}
+    for mode, axes, kw in [
+            ("free", {"seed": seeds}, {}),
+            ("faulted", {"faults": list(lanes), "seed": seeds}, {}),
+            ("faulted_chunked", {"faults": list(lanes), "seed": seeds},
+             dict(chunk=1)),
+            ("noop_axis", {"faults": noop_lanes, "seed": seeds}, {})]:
+        t = timer(f"bench.faults.{mode}")
+        with t:                                   # cold: includes compile
+            results[mode] = sweep(scn, axes=axes, **kw)
+        cold_us = t.last_us
+        with t:                                   # warm: cached program
+            results[mode] = sweep(scn, axes=axes, **kw)
+        n_sims = int(np.prod(results[mode].makespan_us.shape))
+        rows.append((f"faults/{mode}_warm_us", t.last_us,
+                     f"cold={cold_us:.0f}us"))
+        rows.append((f"faults/{mode}_lanes_per_s",
+                     n_sims / max(t.last_s, 1e-9), f"{n_sims}sims"))
+
+    free = timer("bench.faults.free").last_s
+    faulted = timer("bench.faults.faulted").last_s
+    rows.append(("faults/overhead_x",
+                 faulted / max(free, 1e-9),
+                 f"{len(lanes)}x lanes warm faulted-vs-free"))
+    # per-simulation slowdown of the fail-stop scan (longer static bound)
+    per_sim = (faulted / len(lanes)) / max(free, 1e-9)
+    rows.append(("faults/per_sim_overhead_x", per_sim,
+                 "amortised per fault lane"))
+
+    mk = results["faulted"].makespan_us            # (F, S)
+    degraded = mk[1:].mean(axis=1)                 # per lost PE
+    nominal = float(mk[0].mean())
+    rows.append(("faults/nominal_makespan_us", nominal, "fault-free lane"))
+    rows.append(("faults/worst_loss_makespan_us", float(degraded.max()),
+                 f"worst single-PE loss @t={FAULT_TIME_US:.0f}us"))
+    rows.append(("faults/degradation_x", float(degraded.max()) / nominal,
+                 "worst-loss / nominal"))
+    noop = results["noop_axis"].makespan_us
+    rows.append(("faults/noop_bitexact",
+                 float(np.array_equal(noop[0], noop[1])
+                       and np.array_equal(
+                           noop[0], results["free"].makespan_us)),
+                 "1.0=no-op lanes equal fault-free"))
+    rows.append(("faults/chunked_bitexact",
+                 float(np.array_equal(results["faulted"].makespan_us,
+                                      results["faulted_chunked"]
+                                      .makespan_us)),
+                 "1.0=chunked faulted grid equals unchunked"))
+    return rows
+
+
+def main(argv=None) -> int:
+    return bench_cli(run, "faults", __doc__, argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,11 +9,11 @@ import traceback
 
 def main() -> None:
     from . import bench_table1, bench_fig3, bench_speedup, bench_dtpm, \
-        bench_dse, bench_roofline, bench_shard
+        bench_dse, bench_roofline, bench_faults, bench_shard
     print("name,us_per_call,derived")
     ok = True
     for mod in (bench_table1, bench_fig3, bench_speedup, bench_dtpm,
-                bench_dse, bench_roofline, bench_shard):
+                bench_dse, bench_roofline, bench_faults, bench_shard):
         try:
             for name, val, derived in mod.run():
                 print(f"{name},{val:.4f},{derived}")

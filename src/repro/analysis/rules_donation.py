@@ -156,9 +156,14 @@ def _check_calls(mod: ModuleInfo, donors: Dict[str, _Donor]) \
         fn = mod.enclosing_function(node)
         if fn is None or isinstance(fn, ast.Lambda):
             continue
+        # a donating call inside `return`/`raise` exits the function — no
+        # later read in this body can ever follow it
+        if any(isinstance(a, (ast.Return, ast.Raise))
+               for a in _ancestors(fn, node)):
+            continue
         donated = _donated_names(node, donor)
         for arg_name in sorted(donated):
-            read = _read_after(fn, arg_name, node.lineno)
+            read = _read_after(fn, arg_name, node)
             if read is not None:
                 short = (dotted or "").rsplit(".", 1)[-1]
                 out.append(Finding(
@@ -183,10 +188,17 @@ def _donated_names(call: ast.Call, donor: _Donor) -> Set[str]:
     return names
 
 
-def _read_after(fn: ast.AST, name: str, call_line: int) \
+def _read_after(fn: ast.AST, name: str, call: ast.Call) \
         -> Optional[ast.Name]:
-    """First ``Load`` of ``name`` after ``call_line`` and before the name is
-    rebound (a rebind refreshes the buffer, ending the hazard window)."""
+    """First ``Load`` of ``name`` after the donating call and before the name
+    is rebound (a rebind refreshes the buffer, ending the hazard window).
+
+    Two kinds of read can never observe the donation and are skipped: args
+    of the call expression itself when it spans multiple lines, and reads in
+    an exclusive sibling branch of an ``if`` the call sits in — only one of
+    the two branches runs, so a read in the other never follows the call.
+    """
+    call_line = getattr(call, "end_lineno", None) or call.lineno
     rebind_line = None
     for n in ast.walk(fn):
         if isinstance(n, ast.Name) and n.id == name and \
@@ -200,7 +212,62 @@ def _read_after(fn: ast.AST, name: str, call_line: int) \
                 isinstance(n.ctx, ast.Load) and n.lineno > call_line:
             if rebind_line is not None and n.lineno >= rebind_line:
                 continue
+            if _exclusive_branches(fn, call, n):
+                continue
             if best is None or (n.lineno, n.col_offset) < \
                     (best.lineno, best.col_offset):
                 best = n
     return best
+
+
+def _ancestors(fn: ast.AST, target: ast.AST) -> List[ast.AST]:
+    """Ancestor chain of ``target`` inside ``fn`` (innermost first)."""
+    path: List[ast.AST] = []
+
+    def dfs(node: ast.AST) -> bool:
+        if node is target:
+            return True
+        for child in ast.iter_child_nodes(node):
+            if dfs(child):
+                path.append(node)
+                return True
+        return False
+
+    dfs(fn)
+    return path
+
+
+def _branch_path(fn: ast.AST, target: ast.AST) \
+        -> Optional[List[Tuple[int, str]]]:
+    """``(id(if_node), "body"|"orelse")`` pairs on the path to ``target``."""
+
+    def dfs(node: ast.AST, acc: List[Tuple[int, str]]):
+        if node is target:
+            return acc
+        if isinstance(node, ast.If):
+            r = dfs(node.test, acc)
+            if r is not None:
+                return r
+            for branch in ("body", "orelse"):
+                for child in getattr(node, branch):
+                    r = dfs(child, acc + [(id(node), branch)])
+                    if r is not None:
+                        return r
+            return None
+        for child in ast.iter_child_nodes(node):
+            r = dfs(child, acc)
+            if r is not None:
+                return r
+        return None
+
+    return dfs(fn, [])
+
+
+def _exclusive_branches(fn: ast.AST, a: ast.AST, b: ast.AST) -> bool:
+    """True when ``a`` and ``b`` sit in opposite branches of a shared
+    ``if`` — at most one of them executes on any given call."""
+    pa, pb = _branch_path(fn, a), _branch_path(fn, b)
+    if pa is None or pb is None:
+        return False
+    sides = dict(pa)
+    return any(sides.get(key, side) != side for key, side in pb)

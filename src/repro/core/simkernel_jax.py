@@ -320,13 +320,36 @@ def _window_step(tables: SimTables, valid_j, window, up, cap, A_rc, B_rc,
 
 def _epoch_scan(tables: SimTables, policy: str, num_jobs: int,
                 arrival: jnp.ndarray, app_idx: jnp.ndarray,
-                gov: Optional[GovernorPolicy]):
+                gov: Optional[GovernorPolicy],
+                faults: Optional[jnp.ndarray] = None,
+                scan_steps: Optional[int] = None):
     """Shared epoch-scan body: ``gov=None`` compiles the static-OPP program
     (tables carry the latency/power at the governor's fixed OPP); a dynamic
-    ``GovernorPolicy`` closes the DVFS + thermal loop per sampling window."""
+    ``GovernorPolicy`` closes the DVFS + thermal loop per sampling window.
+
+    ``faults`` (optional, (P,) f32 fail times, ``+inf`` = never — see
+    ``repro.scenario.faults.fault_plan``) compiles the fail-stop program
+    (DESIGN.md §14): the carry gains a per-PE ``fired`` mask and a per-task
+    re-enqueue ``floor``; when an epoch crosses a fail time the dead PE's
+    unfinished tasks and their committed descendants roll back inside the
+    scan, and the scheduler's argmin excludes dead PEs (graceful
+    degradation: accelerator tasks fall back to surviving CPU PEs).
+    ``faults=None`` keeps this program byte-identical to the fault-free
+    kernel.  ``scan_steps`` (static) bounds the iteration count and is
+    required with faults — rollbacks re-commit tasks, so ``J·T`` no longer
+    suffices (``repro.scenario.faults.fault_scan_steps``).
+    """
     T, P = tables.t_max, tables.num_pes
     J = num_jobs
     dtpm = gov is not None
+    faulted = faults is not None
+    if faulted and policy == "table":
+        raise ValueError(
+            "fail-stop injection needs a PE-masking scheduler; the table "
+            "policy pins static assignments — use met/etf (DESIGN.md §14)")
+    if faulted and scan_steps is None:
+        raise ValueError("the faulted scan needs a static scan_steps bound "
+                         "(see repro.scenario.faults.fault_scan_steps)")
 
     pred_j = tables.pred[app_idx]          # (J, T, T)
     ebytes_j = tables.ebytes[app_idx]      # (J, T, T)
@@ -335,7 +358,9 @@ def _epoch_scan(tables: SimTables, policy: str, num_jobs: int,
     if not dtpm:
         exec_j = tables.exec_us[app_idx]   # (J, T, P)
 
-    total = J * T  # static iteration bound: one commit per real task
+    # static iteration bound: one commit per real task, plus the rollback
+    # re-commits + skip epochs a caller-supplied fault budget adds
+    total = J * T if scan_steps is None else scan_steps
 
     state = dict(
         scheduled=~valid_j,                              # invalid = pre-done
@@ -344,6 +369,11 @@ def _epoch_scan(tables: SimTables, policy: str, num_jobs: int,
         onpe=jnp.zeros((J, T), jnp.int32),
         pe_free=jnp.zeros((P,), jnp.float32),
     )
+    if faulted:
+        state.update(
+            fired=jnp.zeros((P,), bool),                 # PE dead already
+            floor=jnp.zeros((J, T), jnp.float32),        # re-enqueue floor
+        )
     if dtpm:
         C = tables.opp_freq.shape[0]
         window = jnp.asarray(gov.sample_window_us, jnp.float32)
@@ -369,14 +399,52 @@ def _epoch_scan(tables: SimTables, policy: str, num_jobs: int,
         return _window_step(tables, valid_j, window, up, cap, A_rc, B_rc,
                             st, carry)[0]
 
+    def apply_faults(st, fire):
+        """Fail-stop rollback (the in-scan twin of the reference kernel's
+        ``apply_failure``): invalidate unfinished tasks on the PEs firing
+        now plus their committed-descendant closure, reset their records,
+        recompute the queue drain times from the surviving schedule, and
+        floor direct victims at the fail time (descendants and tasks whose
+        pred was lost re-ready off their preds' fresh finish times)."""
+        committed = st["scheduled"] & valid_j
+        onpe, fin = st["onpe"], st["finish"]
+        ftime = faults[onpe]                                       # (J, T)
+        inv = committed & fire[onpe] & (fin > ftime)
+        closure = lambda _, acc: acc | (
+            committed & jnp.any(pred_j & acc[:, None, :], axis=-1))
+        inv = jax.lax.fori_loop(0, T, closure, inv)
+        any_pred_inv = jnp.any(pred_j & inv[:, None, :], axis=-1)  # (J, T)
+        roots = inv & ~any_pred_inv                # all preds still committed
+        sched2 = st["scheduled"] & ~inv
+        fin2 = jnp.where(inv, 0.0, fin)
+        recomputed = jnp.zeros((P,), jnp.float32).at[onpe].max(
+            jnp.where(sched2 & valid_j, fin2, 0.0))
+        new = dict(
+            st,
+            scheduled=sched2,
+            finish=fin2,
+            start=jnp.where(inv, 0.0, st["start"]),
+            onpe=jnp.where(inv, 0, onpe),
+            pe_free=jnp.where(jnp.any(inv), recomputed, st["pe_free"]),
+            fired=st["fired"] | fire,
+            floor=jnp.where(roots, ftime,
+                            jnp.where(any_pred_inv, 0.0, st["floor"])),
+        )
+        if dtpm:
+            new["onopp"] = jnp.where(inv, 0, st["onopp"])
+        return new
+
     def body(st, _):
         scheduled, finish = st["scheduled"], st["finish"]
         # 1. eligibility: job tasks whose preds are all committed
         preds_open = jnp.any(pred_j & ~scheduled[:, None, :], axis=-1)   # (J, T)
         eligible = (~scheduled) & (~preds_open)
-        # 2. epoch time (no comm): max(arrival, max pred finish)
+        # 2. epoch time (no comm): max(arrival, max pred finish); rolled-back
+        # direct fault victims additionally wait out the fail time (floor)
         pf = jnp.where(pred_j, finish[:, None, :], -BIG)                  # (J,T,T)
         ready = jnp.maximum(arrival[:, None], jnp.max(pf, axis=-1))      # (J, T)
+        if faulted:
+            ready = jnp.maximum(ready, st["floor"])
         ready = jnp.where(eligible, ready, BIG)
         # 3. lexicographic argmin (ready, job, task)
         rmin = jnp.min(ready)
@@ -385,10 +453,23 @@ def _epoch_scan(tables: SimTables, policy: str, num_jobs: int,
         j, t = pick // T, pick % T
         any_left = rmin < BIG * 0.5
 
+        # 3a. fail-stop events this epoch crosses fire before anything else
+        # (the reference kernel triggers them at heap pop); the pick then
+        # goes stale exactly when the rollback took one of its preds — that
+        # epoch is skipped, like the oracle's stale heap entries
+        if faulted:
+            fire = (~st["fired"]) & (faults <= rmin) & any_left
+            st = jax.lax.cond(jnp.any(fire), apply_faults,
+                              lambda s, _f: s, st, fire)
+            skip = jnp.any(pred_j[j, t] & ~st["scheduled"][j])
+            do_commit = any_left & ~skip
+        else:
+            do_commit = any_left
+
         # 3b. DVFS windows elapsed before this epoch close the loop: the
         # governor transition + thermal feedback run, then latency re-indexes
         if dtpm:
-            now = jnp.where(any_left, rmin, -BIG)
+            now = jnp.where(do_commit, rmin, -BIG)
             opp_idx, next_w, temps, peak = jax.lax.while_loop(
                 lambda c: c[1] <= now,
                 functools.partial(advance_window, st),
@@ -411,13 +492,18 @@ def _epoch_scan(tables: SimTables, policy: str, num_jobs: int,
         start_c = jnp.maximum(data_ready, st["pe_free"])                # (P,)
         fin_c = start_c + ex                                            # (P,)
 
-        # 5. policy
+        # 5. policy — dead PEs are excluded from the argmin the same way the
+        # reference schedulers apply ctx.available (np.inf candidates), NOT
+        # via pe_free: the oracle skips its pe_free recompute when a fault
+        # invalidates nothing, so the mask is the only exclusion channel
         if policy == "etf":
-            pe = jnp.argmin(fin_c).astype(jnp.int32)
+            cand = jnp.where(st["fired"], jnp.inf, fin_c) if faulted else fin_c
+            pe = jnp.argmin(cand).astype(jnp.int32)
         elif policy == "met":
             # canonical MET: min execution time, availability ignored
             # (DVFS-scaled at the current OPP, matching the reference)
-            pe = jnp.argmin(ex).astype(jnp.int32)
+            cand = jnp.where(st["fired"], jnp.inf, ex) if faulted else ex
+            pe = jnp.argmin(cand).astype(jnp.int32)
         elif policy == "table":
             pe = table_j[j, t]
         else:
@@ -440,7 +526,7 @@ def _epoch_scan(tables: SimTables, policy: str, num_jobs: int,
                 new["onopp"] = st["onopp"].at[j, t].set(opp_of_pe[pe])
             return new
 
-        return jax.lax.cond(any_left, commit, lambda s: s, st), None
+        return jax.lax.cond(do_commit, commit, lambda s: s, st), None
 
     st, _ = jax.lax.scan(body, state, None, length=total)
 
@@ -485,39 +571,68 @@ def _epoch_scan(tables: SimTables, policy: str, num_jobs: int,
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "num_jobs"))
+@functools.partial(jax.jit,
+                   static_argnames=("policy", "num_jobs", "scan_steps"))
 def _simulate(tables: SimTables, policy: str, num_jobs: int,
-              arrival: jnp.ndarray, app_idx: jnp.ndarray):
+              arrival: jnp.ndarray, app_idx: jnp.ndarray,
+              faults: Optional[jnp.ndarray] = None,
+              scan_steps: Optional[int] = None):
     if tables.exec_opp is not None:
         # dynamic-built tables bake exec_us at the governor's initial (fmin)
         # OPP — the static kernel would return plausible but wrong numbers
         raise ValueError("tables were built for a dynamic governor; run "
                          "them through simulate_jax_dtpm (DESIGN.md §7)")
     _COMPILES_STATIC.inc()  # lint: waive JX003 -- deliberate: counts compiles, python body runs per trace
-    return _epoch_scan(tables, policy, num_jobs, arrival, app_idx, None)
+    return _epoch_scan(tables, policy, num_jobs, arrival, app_idx, None,
+                       faults, scan_steps)
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "num_jobs"))
+@functools.partial(jax.jit,
+                   static_argnames=("policy", "num_jobs", "scan_steps"))
 def _simulate_dtpm(tables: SimTables, policy: str, num_jobs: int,
                    arrival: jnp.ndarray, app_idx: jnp.ndarray,
-                   gov: GovernorPolicy):
+                   gov: GovernorPolicy,
+                   faults: Optional[jnp.ndarray] = None,
+                   scan_steps: Optional[int] = None):
     if tables.exec_opp is None:
         raise ValueError("tables lack OPP ladders; build them with the "
                          "dynamic governor (build_tables(governor=...))")
     _COMPILES_DTPM.inc()  # lint: waive JX003 -- deliberate: counts compiles, python body runs per trace
-    return _epoch_scan(tables, policy, num_jobs, arrival, app_idx, gov)
+    return _epoch_scan(tables, policy, num_jobs, arrival, app_idx, gov,
+                       faults, scan_steps)
+
+
+def _fault_steps(num_jobs: int, t_max: int, faults) -> int:
+    """Static scan bound for a concrete (P,) fault plan: every fault may
+    roll back all J·T committed tasks and costs one skipped epoch."""
+    n = int(np.isfinite(np.asarray(faults)).sum())
+    return num_jobs * t_max * (1 + n) + n
 
 
 def simulate_jax(tables: SimTables, policy: str, arrival: np.ndarray,
-                 app_idx: np.ndarray):
-    """Single simulation.  ``arrival``: (J,) f32; ``app_idx``: (J,) i32."""
-    return _simulate(tables, policy, int(arrival.shape[0]),
+                 app_idx: np.ndarray, faults=None):
+    """Single simulation.  ``arrival``: (J,) f32; ``app_idx``: (J,) i32.
+
+    ``faults``: optional (P,) fail-time plan (f32, ``+inf`` = never fails;
+    see ``repro.scenario.faults.fault_plan``) — compiles the fail-stop
+    program (DESIGN.md §14), bit-for-bit equal to the reference kernel's
+    rollback semantics on comm-free traces.
+    """
+    J = int(arrival.shape[0])
+    if faults is None:
+        return _simulate(tables, policy, J,
+                         jnp.asarray(arrival, jnp.float32),
+                         jnp.asarray(app_idx, jnp.int32))
+    return _simulate(tables, policy, J,
                      jnp.asarray(arrival, jnp.float32),
-                     jnp.asarray(app_idx, jnp.int32))
+                     jnp.asarray(app_idx, jnp.int32),
+                     jnp.asarray(faults, jnp.float32),
+                     scan_steps=_fault_steps(J, tables.t_max, faults))
 
 
 def simulate_jax_dtpm(tables: SimTables, policy: str, arrival: np.ndarray,
-                      app_idx: np.ndarray, gov: GovernorPolicy):
+                      app_idx: np.ndarray, gov: GovernorPolicy,
+                      faults=None):
     """Single closed-loop DTPM simulation under a dynamic governor policy.
 
     The output dict gains ``onopp`` (the OPP index latched per task),
@@ -533,9 +648,16 @@ def simulate_jax_dtpm(tables: SimTables, policy: str, arrival: np.ndarray,
                          "simulate_jax (DESIGN.md §7)")
     validate_policy_params(gov.sample_window_us, gov.up_threshold,
                            gov.thermal_dt_s)
-    return _simulate_dtpm(tables, policy, int(arrival.shape[0]),
+    J = int(arrival.shape[0])
+    if faults is None:
+        return _simulate_dtpm(tables, policy, J,
+                              jnp.asarray(arrival, jnp.float32),
+                              jnp.asarray(app_idx, jnp.int32), gov)
+    return _simulate_dtpm(tables, policy, J,
                           jnp.asarray(arrival, jnp.float32),
-                          jnp.asarray(app_idx, jnp.int32), gov)
+                          jnp.asarray(app_idx, jnp.int32), gov,
+                          jnp.asarray(faults, jnp.float32),
+                          scan_steps=_fault_steps(J, tables.t_max, faults))
 
 
 def simulate_batch(tables: SimTables, policy: str, arrival: np.ndarray,

@@ -71,18 +71,32 @@ class SimResult:
         return busy / max(self.makespan_us, 1e-9)
 
 
+def _fail_times(failures) -> Dict[int, float]:
+    """Per-PE fail time, last-wins.  Accepts ``(pe_id, fail_time_us)``
+    pairs or ``repro.scenario.FaultSpec`` objects (duck-typed on the
+    ``pe_id`` attribute — core must not import the scenario facade)."""
+    out: Dict[int, float] = {}
+    for f in failures or []:
+        if hasattr(f, "pe_id"):
+            out[int(f.pe_id)] = float(f.fail_time_us)
+        else:
+            p, t = f
+            out[int(p)] = float(t)
+    return {p: t for p, t in out.items() if np.isfinite(t)}
+
+
 def simulate(db: ResourceDB, apps: Sequence[Application], trace: JobTrace,
              scheduler: Scheduler, governor: Optional[Governor] = None,
              failures: Optional[Sequence[Tuple[int, float]]] = None,
              telemetry=None) -> SimResult:
     """Run one simulation; returns the full schedule + aggregate stats.
 
-    ``failures``: optional fail-stop events [(pe_id, fail_time_us), ...] —
-    at fail time the PE dies permanently; tasks in flight or queued on it
-    (and their already-committed descendants) are rolled back and
-    re-scheduled on the surviving PEs.  Models node loss the same way the
-    pod-scale half handles preemption (checkpoint/restart): the work is
-    lost, the workload still completes.
+    ``failures``: optional fail-stop events — ``FaultSpec`` objects or bare
+    ``(pe_id, fail_time_us)`` pairs — at fail time the PE dies permanently;
+    tasks in flight or queued on it (and their already-committed
+    descendants) are rolled back and re-scheduled on the surviving PEs.
+    Models node loss the same way the pod-scale half handles preemption
+    (checkpoint/restart): the work is lost, the workload still completes.
 
     ``telemetry``: optional per-window recorder (duck-typed:
     ``repro.obs.telemetry.TelemetryRecorder``).  Under a dynamic governor
@@ -99,7 +113,7 @@ def simulate(db: ResourceDB, apps: Sequence[Application], trace: JobTrace,
 
     n_pes = db.num_pes
     pe_free = np.zeros(n_pes, dtype=np.float32)
-    fail_at = {int(p): float(t) for p, t in (failures or [])}
+    fail_at = _fail_times(failures)
     failed: set = set()
 
     # cluster DVFS state (cluster id -> freq); accelerators fixed
@@ -209,13 +223,25 @@ def simulate(db: ResourceDB, apps: Sequence[Application], trace: JobTrace,
     on_pe: Dict[Tuple[int, int], int] = {}
     n_done_preds: Dict[Tuple[int, int], int] = {}
 
-    heap: List[Tuple[float, int, int]] = []     # (ready, job, task)
+    # heap entries carry a per-task version stamp: fault rollback can leave
+    # stale entries whose (ready, …) key no longer reflects the re-simulated
+    # predecessor finishes — bumping the version at invalidation makes them
+    # skip cleanly at pop (without faults each task is pushed exactly once,
+    # so versioning never changes fault-free behaviour)
+    heap: List[Tuple[float, int, int, int]] = []   # (ready, job, task, ver)
+    entry_ver: Dict[Tuple[int, int], int] = {}
+
+    def push_epoch(ready_us: float, jid2: int, tid2: int) -> None:
+        ver = entry_ver.get((jid2, tid2), 0) + 1
+        entry_ver[(jid2, tid2)] = ver
+        heapq.heappush(heap, (ready_us, jid2, tid2, ver))
+
     for jid in range(num_jobs):
         app = job_apps[jid]
         for t in app.tasks:
             n_done_preds[(jid, t.task_id)] = 0
             if not t.predecessors:
-                heapq.heappush(heap, (float(trace.arrival_us[jid]), jid, t.task_id))
+                push_epoch(float(trace.arrival_us[jid]), jid, t.task_id)
 
     def apply_failure(pe_id: int, f_time: float) -> None:
         """Fail-stop ``pe_id`` at ``f_time``: roll back its unfinished tasks
@@ -248,8 +274,8 @@ def simulate(db: ResourceDB, apps: Sequence[Application], trace: JobTrace,
             pe_free[r.pe_id] = max(pe_free[r.pe_id], r.finish_us)
         pe_free[pe_id] = np.float32(np.inf)
         # reset dependency counters so pred re-completion re-unlocks children
-        # (also for PENDING tasks whose pred got invalidated: their stale
-        # heap entries are skipped at pop and re-pushed via the unlock path)
+        # (also for PENDING tasks whose pred got invalidated: their heap
+        # entries are version-stale — skipped at pop, re-pushed via unlock)
         for jid2 in range(num_jobs):
             for t2 in job_apps[jid2].tasks:
                 key2 = (jid2, t2.task_id)
@@ -257,6 +283,8 @@ def simulate(db: ResourceDB, apps: Sequence[Application], trace: JobTrace,
                     continue
                 n_done_preds[key2] = sum(
                     1 for p in t2.predecessors if (jid2, p) in finish)
+                if any((jid2, p) in invalid for p in t2.predecessors):
+                    entry_ver[key2] = entry_ver.get(key2, 0) + 1
         # re-enqueue invalidated tasks whose preds are all still committed
         for jid2, tid2 in invalid:
             app2 = job_apps[jid2]
@@ -264,17 +292,19 @@ def simulate(db: ResourceDB, apps: Sequence[Application], trace: JobTrace,
             if all((jid2, p) in finish for p in preds2):
                 r2 = max([float(trace.arrival_us[jid2]), f_time]
                          + [finish[(jid2, p)] for p in preds2])
-                heapq.heappush(heap, (r2, jid2, tid2))
+                push_epoch(r2, jid2, tid2)
 
     records: List[TaskRecord] = []
     while heap:
-        ready, jid, tid = heapq.heappop(heap)
+        ready, jid, tid, ver = heapq.heappop(heap)
         # trigger any fail-stop events that precede this epoch
         for pe_id, f_time in sorted(fail_at.items(), key=lambda kv: kv[1]):
             if pe_id not in failed and f_time <= ready:
                 apply_failure(pe_id, f_time)
         app = job_apps[jid]
         task = app.tasks[tid]
+        if ver != entry_ver.get((jid, tid)):
+            continue                      # superseded by a rollback re-push
         if (jid, tid) in finish:          # re-queued duplicate after rollback
             continue
         if any((jid, p) not in finish for p in task.predecessors):
@@ -326,7 +356,7 @@ def simulate(db: ResourceDB, apps: Sequence[Application], trace: JobTrace,
                 if n_done_preds[key] == len(child.predecessors):
                     r = max(float(trace.arrival_us[jid]),
                             max(finish[(jid, p)] for p in child.predecessors))
-                    heapq.heappush(heap, (r, jid, child.task_id))
+                    push_epoch(r, jid, child.task_id)
 
     job_finish = np.zeros(num_jobs, dtype=np.float32)
     for r in records:

@@ -133,6 +133,27 @@ def _simulate_grid(tables: SimTables, policy: str, num_jobs: int,
     return per_design(tables, arrival, app_idx)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("policy", "num_jobs", "scan_steps"))
+def _simulate_grid_faults(tables: SimTables, policy: str, num_jobs: int,
+                          arrival: jnp.ndarray, app_idx: jnp.ndarray,
+                          fplans: jnp.ndarray, scan_steps: int):
+    """(F fault plans) × (D designs) × (S traces) fail-stop simulations.
+
+    ``fplans``: (F, P) f32 per-PE fail times (``+inf`` = never fails, see
+    ``repro.scenario.faults``); ``scan_steps`` is the static epoch budget
+    covering the widest lane's rollbacks (DESIGN.md §14).  The fault axis is
+    outermost so the design axis stays streamable (``scenario.shardexec``).
+    """
+    per_trace = jax.vmap(
+        lambda tb, a, i, fp: _simulate(tb, policy, num_jobs, a, i, fp,
+                                       scan_steps=scan_steps),
+        in_axes=(None, 0, 0, None))
+    per_design = jax.vmap(per_trace, in_axes=(0, None, None, None))
+    per_fault = jax.vmap(per_design, in_axes=(None, None, None, 0))
+    return per_fault(tables, arrival, app_idx, fplans)
+
+
 def simulate_design_batch(batch: DesignBatch, policy: str,
                           arrival: jnp.ndarray, app_idx: jnp.ndarray) -> Dict:
     """Run all designs × traces in one jitted call.

@@ -27,11 +27,24 @@ from .pareto import pareto_mask, pareto_order
 from .space import DesignPoint, DesignSpace
 
 OBJECTIVES = ("avg_latency_us", "energy_j", "peak_temp_c")
+DEGRADED_OBJECTIVE = "degraded_latency_us"
+
+
+def _lane_fires(fault_set) -> bool:
+    """True when a fault-lane value contains at least one firing event."""
+    from ..scenario.faults import normalize_failures
+    return any(not f.is_noop for f in normalize_failures(fault_set))
 
 
 @dataclasses.dataclass
 class EvalResult:
-    """Objectives for D designs, averaged/maxed over S traces."""
+    """Objectives for D designs, averaged/maxed over S traces.
+
+    When ``evaluate(faults=...)`` swept fail-stop lanes, the three
+    ``degraded_*`` fields carry the resilience metric (DESIGN.md §14):
+    per-design worst case over the fault lanes of the trace-mean
+    latency/energy — how gracefully the design degrades when it loses PEs.
+    """
     points: Tuple[DesignPoint, ...]
     avg_latency_us: np.ndarray        # (D,) mean over traces
     energy_j: np.ndarray              # (D,) mean over traces
@@ -39,18 +52,29 @@ class EvalResult:
     latency_per_trace_us: np.ndarray     # (D, S)
     energy_per_trace_j: np.ndarray      # (D, S)
     temp_per_trace_c: np.ndarray        # (D, S)
+    degraded_latency_us: Optional[np.ndarray] = None   # (D,) worst fault lane
+    degraded_energy_j: Optional[np.ndarray] = None     # (D,) worst fault lane
+    latency_per_fault_us: Optional[np.ndarray] = None  # (F, D) trace means
 
     @property
     def num_designs(self) -> int:
         return len(self.points)
 
     def objectives(self) -> np.ndarray:
-        """(D, 3) cost matrix (all minimised) in OBJECTIVES order."""
-        return np.stack([self.avg_latency_us, self.energy_j,
-                         self.peak_temp_c], axis=1)
+        """(D, 3) cost matrix (all minimised) in OBJECTIVES order — (D, 4)
+        with the degraded-latency resilience column when faults were swept."""
+        cols = [self.avg_latency_us, self.energy_j, self.peak_temp_c]
+        if self.degraded_latency_us is not None:
+            cols.append(self.degraded_latency_us)
+        return np.stack(cols, axis=1)
 
     def front_mask(self) -> np.ndarray:
         return pareto_mask(self.objectives())
+
+
+def _cat_opt(x, y, axis: int = 0):
+    return (np.concatenate([x, y], axis=axis)
+            if x is not None and y is not None else None)
 
 
 def _concat(a: "EvalResult", b: "EvalResult") -> "EvalResult":
@@ -63,7 +87,12 @@ def _concat(a: "EvalResult", b: "EvalResult") -> "EvalResult":
                                           b.latency_per_trace_us]),
         energy_per_trace_j=np.concatenate([a.energy_per_trace_j,
                                          b.energy_per_trace_j]),
-        temp_per_trace_c=np.concatenate([a.temp_per_trace_c, b.temp_per_trace_c]))
+        temp_per_trace_c=np.concatenate([a.temp_per_trace_c, b.temp_per_trace_c]),
+        degraded_latency_us=_cat_opt(a.degraded_latency_us,
+                                     b.degraded_latency_us),
+        degraded_energy_j=_cat_opt(a.degraded_energy_j, b.degraded_energy_j),
+        latency_per_fault_us=_cat_opt(a.latency_per_fault_us,
+                                      b.latency_per_fault_us, axis=1))
 
 
 def evaluate(points: Sequence[DesignPoint], apps: Sequence[Application],
@@ -74,7 +103,8 @@ def evaluate(points: Sequence[DesignPoint], apps: Sequence[Application],
              governor: str = "design",
              governor_params: Tuple[Tuple[str, float], ...] = (),
              chunk: Optional[int] = None,
-             shard: Optional[bool] = None) -> EvalResult:
+             shard: Optional[bool] = None,
+             faults: Optional[Sequence] = None) -> EvalResult:
     """Evaluate D designs × S traces in one vmapped/jitted call per policy.
 
     ``pad_pes`` fixes the padded PE width so successive calls with different
@@ -94,6 +124,15 @@ def evaluate(points: Sequence[DesignPoint], apps: Sequence[Application],
     OPP dimension (each design's ladder truncated at its caps) and peak
     temperature comes from the kernel's inline RC loop, so
     ``thermal_bins``/``thermal_repeats`` only shape the static path.
+
+    ``faults`` adds a resilience objective: a sequence of fail-stop fault
+    sets (e.g. ``repro.scenario.pe_loss_faults(range(4), k=1)`` — every
+    1-PE-loss of the first cluster) swept as one extra vmapped lane axis
+    through the same compiled program per policy.  The degraded-mode
+    latency/energy (worst case over the fault lanes of the trace means)
+    land on ``EvalResult.degraded_*``, and ``objectives()`` grows the
+    degraded-latency column so the Pareto front trades peak performance
+    against graceful degradation (DESIGN.md §14).
     """
     # lazy import: repro.scenario builds on repro.dse, not the reverse
     from ..scenario import Scenario, ThermalSpec
@@ -128,16 +167,32 @@ def evaluate(points: Sequence[DesignPoint], apps: Sequence[Application],
         raise ValueError(
             "design batch and governor disagree: rebuild the batch with "
             "build_design_batch(..., governor=...) matching the governor")
-    sr = sweep(base, axes={"design": list(batch.points),
-                           "trace": list(traces)},
+    axes: Dict = {"design": list(batch.points), "trace": list(traces)}
+    if faults is not None:
+        axes["faults"] = list(faults)
+    sr = sweep(base, axes=axes,
                backend="jax", design_batch=batch, chunk=chunk, shard=shard)
     lat, energy, temps = sr.avg_latency_us, sr.energy_j, sr.peak_temp_c
+    deg_kw: Dict = {}
+    if faults is not None:
+        # (D, S, F) per the axes-dict order; worst fault lane of trace means
+        lat_f = np.moveaxis(lat, 2, 0)            # (F, D, S)
+        en_f = np.moveaxis(energy, 2, 0)
+        deg_kw = dict(degraded_latency_us=lat_f.mean(axis=2).max(axis=0),
+                      degraded_energy_j=en_f.mean(axis=2).max(axis=0),
+                      latency_per_fault_us=lat_f.mean(axis=2))
+        # the nominal objectives stay the fault-free ones: the first
+        # all-no-op lane if present, else the first lane
+        noop = next((i for i, fs in enumerate(axes["faults"])
+                     if not _lane_fires(fs)), 0)
+        lat, energy, temps = lat[:, :, noop], energy[:, :, noop], \
+            temps[:, :, noop]
     return EvalResult(points=tuple(batch.points),
                       avg_latency_us=lat.mean(axis=1),
                       energy_j=energy.mean(axis=1),
                       peak_temp_c=temps.max(axis=1),
                       latency_per_trace_us=lat, energy_per_trace_j=energy,
-                      temp_per_trace_c=temps)
+                      temp_per_trace_c=temps, **deg_kw)
 
 
 def successive_halving(points: Sequence[DesignPoint],

@@ -27,13 +27,16 @@ _PH_ORDER = {"E": 0, "B": 1, "i": 2, "C": 3}   # equal-ts tie-break: close
 
 
 def chrome_trace(db, result, apps: Optional[Sequence] = None,
-                 trace=None, telemetry=None,
+                 trace=None, telemetry=None, failures=None,
                  label: str = "repro-soc") -> Dict:
     """Build the trace-event dict for one reference run.
 
     ``apps``/``trace`` (the Application list and JobTrace) are optional and
     only used to resolve human-readable task names; without them tasks are
     labelled ``j<job>.t<task>``.  ``telemetry`` adds the counter tracks.
+    ``failures`` (the scenario's fail-stop specs, DESIGN.md §14) adds a
+    process-scoped instant marker on each dying PE's track at its fail time,
+    so the rollback gap and the survivors' pile-up line up visually.
     """
     meta: List[Dict] = [{
         "name": "process_name", "ph": "M", "pid": TRACE_PID, "tid": 0,
@@ -62,6 +65,18 @@ def chrome_trace(db, result, apps: Optional[Sequence] = None,
                        "tid": r.pe_id, "ts": r.finish_us})
         events.append({"name": f"ready {name}", "ph": "i", "s": "t",
                        "pid": TRACE_PID, "tid": r.pe_id, "ts": r.ready_us})
+
+    if failures:
+        # lazy import: obs must stay importable without the scenario facade
+        from ..scenario.faults import normalize_failures
+        for f in normalize_failures(failures):
+            if f.is_noop:
+                continue
+            events.append({
+                "name": f"FAIL-STOP PE{f.pe_id}", "ph": "i", "s": "p",
+                "pid": TRACE_PID, "tid": f.pe_id,
+                "ts": float(f.fail_time_us),
+                "args": {"pe": f.pe_id, "kind": f.kind}})
 
     if telemetry is not None and telemetry.num_windows:
         t_us = telemetry.time_us

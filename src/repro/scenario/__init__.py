@@ -13,9 +13,13 @@ Both are bit-for-bit delegates to the legacy kernels (`repro.core.simulate`,
 for the pytree layout, padding rules and equivalence contract.
 """
 from .config import Scenario, ThermalSpec, TraceSpec
+from .errors import BackendCapabilityError, LaneAxisError, ScenarioError
+from .faults import FaultSpec, pe_loss_faults
 from .result import Result, SweepResult
 from .run import run, tables_for
 from .sweep import sweep
 
-__all__ = ["Scenario", "ThermalSpec", "TraceSpec", "Result", "SweepResult",
-           "run", "sweep", "tables_for"]
+__all__ = ["Scenario", "ThermalSpec", "TraceSpec", "FaultSpec",
+           "pe_loss_faults", "Result", "SweepResult", "run", "sweep",
+           "tables_for", "ScenarioError", "BackendCapabilityError",
+           "LaneAxisError"]

@@ -28,6 +28,7 @@ from ..core.resources import ResourceDB
 from ..core.schedulers import (Scheduler, TableScheduler, get_scheduler,
                                solve_optimal_table)
 from ..dse.space import DesignPoint
+from .faults import FaultSpec, normalize_failures
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,8 +88,10 @@ class Scenario:
       governor_params — extra governor kwargs as a hashable (key, value)
                     tuple, e.g. ``(("up_threshold", 0.9),)``;
       thermal     — peak-temperature evaluation settings;
-      failures    — fail-stop events ((pe_id, fail_time_us), …), reference
-                    backend only;
+      failures    — fail-stop events (:class:`FaultSpec`, …), supported on
+                    both backends (DESIGN.md §14); bare
+                    ``(pe_id, fail_time_us)`` tuples are accepted through a
+                    one-release ``DeprecationWarning`` shim;
       telemetry   — record per-sampling-window timelines (frequency,
                     utilisation, power, temperature) on ``Result.telemetry``
                     (DESIGN.md §11).  Observation-only: the simulated
@@ -101,8 +104,14 @@ class Scenario:
     governor: str = "performance"
     governor_params: Tuple[Tuple[str, float], ...] = ()
     thermal: ThermalSpec = ThermalSpec()
-    failures: Tuple[Tuple[int, float], ...] = ()
+    failures: Tuple[FaultSpec, ...] = ()
     telemetry: bool = False
+
+    def __post_init__(self):
+        # canonicalise the failures field (legacy bare tuples warn + convert)
+        # so every consumer — table cache keys included — sees FaultSpecs
+        object.__setattr__(self, "failures",
+                           normalize_failures(self.failures))
 
     # -- materialisation (the single construction point) -------------------
     def soc(self) -> ResourceDB:

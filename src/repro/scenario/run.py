@@ -25,7 +25,9 @@ from ..core.thermal import cluster_nodes
 from ..dse import thermal_jax as _thermal_jax
 from ..obs import metrics as _metrics
 from ..obs import telemetry as _obs_tel
+from . import faults as _faults
 from .config import Scenario, ThermalSpec, TraceSpec
+from .errors import BackendCapabilityError, ScenarioError
 from .result import Result
 
 BACKENDS = ("ref", "jax")
@@ -107,8 +109,11 @@ def run(scenario: Scenario, backend: str = "ref", *,
     the tables and report the binned RC co-simulation's peak temperature;
     the ondemand family runs the closed DTPM loop inside the epoch scan and
     reports the peak temperature of its inline RC feedback (DESIGN.md §7).
-    Both return the same :class:`Result` surface, carrying an
-    ``obs.metrics`` run manifest.
+    Both kernels honour fail-stop ``scenario.failures`` bit-for-bit on
+    comm-free traces (DESIGN.md §14); the jax backend needs a runtime
+    scheduler (met/etf) for graceful degradation and defers to ``ref`` for
+    in-loop telemetry under dynamic-governor faults.  Both return the same
+    :class:`Result` surface, carrying an ``obs.metrics`` run manifest.
 
     ``trace_override``: a pre-materialised ``JobTrace`` replacing the
     scenario's trace spec (plumbing for ``sweep`` axes that carry explicit
@@ -134,7 +139,7 @@ def run(scenario: Scenario, backend: str = "ref", *,
         res = _refk.simulate(db, scenario.applications(),
                              trace_override or scenario.job_trace(),
                              scenario.make_scheduler(), governor,
-                             failures=list(scenario.failures) or None,
+                             failures=_faults.ref_failures(scenario.failures),
                              telemetry=rec)
         tel = None
         if want_tel:
@@ -143,16 +148,29 @@ def run(scenario: Scenario, backend: str = "ref", *,
         result = Result.from_ref(scenario, db, res, telemetry=tel)
 
     elif backend == "jax":
-        if scenario.failures:
-            raise ValueError("fail-stop injection is reference-kernel only; "
-                             "use backend='ref'")
+        # no-op fault specs (empty / all-inf) normalise to plan=None here, so
+        # they take the exact fault-free program — same trace, same cache key
+        # (the §14 no-op contract, asserted via sweep.compile_count in tests).
+        plan = _faults.fault_plan(scenario.failures, scenario.design.num_pes)
+        if plan is not None and scenario.scheduler == "table":
+            raise BackendCapabilityError(
+                "fail-stop injection with the 'table' scheduler", "jax",
+                "backend='ref'",
+                detail="the offline ILP table pins tasks to PEs, so dead-PE "
+                       "fallback needs the runtime schedulers (met/etf)")
         tables = tables_for(scenario)
         trace = trace_override or scenario.job_trace()
         pol = scenario.make_policy()
         if pol.dynamic:
+            if plan is not None and want_tel:
+                raise BackendCapabilityError(
+                    "telemetry with faults under a dynamic governor", "jax",
+                    "backend='ref' (it records sampling windows in-loop)",
+                    detail="fail-stop rollback breaks the window-closure "
+                           "invariant the post-hoc replay assumes")
             out = _jaxk.simulate_jax_dtpm(tables, scenario.scheduler,
                                           trace.arrival_us, trace.app_index,
-                                          pol)
+                                          pol, faults=plan)
             tel = (_obs_tel.jax_dtpm_telemetry(tables, pol, out,
                                                trace.app_index)
                    if want_tel else None)
@@ -160,7 +178,8 @@ def run(scenario: Scenario, backend: str = "ref", *,
                                      float(out["peak_temp_c"]), telemetry=tel)
         else:
             out = _jaxk.simulate_jax(tables, scenario.scheduler,
-                                     trace.arrival_us, trace.app_index)
+                                     trace.arrival_us, trace.app_index,
+                                     faults=plan)
             peak = _peak_temp_single(
                 out["start"], out["finish"], out["onpe"], out["scheduled"],
                 _cached_nodes(scenario.design),
@@ -173,7 +192,7 @@ def run(scenario: Scenario, backend: str = "ref", *,
             result = Result.from_jax(scenario, out, scenario.design.num_pes,
                                      float(peak), telemetry=tel)
     else:
-        raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+        raise ScenarioError(f"unknown backend {backend!r}; have {BACKENDS}")
 
     result.manifest = _metrics.run_manifest(scenario=scenario,
                                             backend=backend)

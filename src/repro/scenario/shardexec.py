@@ -40,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..dse.batch import _simulate_grid
+from ..dse.batch import _simulate_grid, _simulate_grid_faults
 from ..dse.thermal_jax import peak_temperature_grid
 from ..core.simkernel_jax import _simulate_dtpm
 from ..obs import metrics as _metrics
@@ -145,6 +145,47 @@ _chunk_dtpm_policy = functools.partial(
     donate_argnames=("gov",))(_dtpm_grid)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("policy", "num_jobs", "bins", "repeats",
+                                    "scan_steps"),
+                   donate_argnames=("tables", "node_of_pe"))
+def _chunk_static_faults(tables, node_of_pe, fplans, arrival, app_idx,
+                         policy, num_jobs, bins, repeats, scan_steps):
+    """Fail-stop static chunk: (F, Dc, S) lanes — same fused body as
+    ``sweep._sweep_grid_faults``.  ``fplans`` is NOT donated: the (F, P)
+    plan stack is reused by every chunk (DESIGN.md §14)."""
+    _compile_count.inc()  # lint: waive JX003 -- deliberate: counts compiles, python body runs per trace
+    out = _simulate_grid_faults(tables, policy, num_jobs, arrival, app_idx,
+                                fplans, scan_steps)
+    temps = jax.vmap(lambda o: peak_temperature_grid(
+        o, node_of_pe, tables.power_active, tables.power_idle, bins=bins,
+        repeats=repeats))(out)
+    return out, temps
+
+
+def _dtpm_grid_faults(tables, gov, fplans, arrival, app_idx, policy,
+                      num_jobs, scan_steps):
+    _compile_count.inc()  # lint: waive JX003 -- deliberate: counts compiles, python body runs per trace
+    per_trace = jax.vmap(
+        lambda tb, g, a, i, fp: _simulate_dtpm(tb, policy, num_jobs, a, i, g,
+                                               fp, scan_steps=scan_steps),
+        in_axes=(None, None, 0, 0, None))
+    per_policy = jax.vmap(per_trace, in_axes=(None, 0, None, None, None))
+    per_design = jax.vmap(per_policy, in_axes=(0, None, None, None, None))
+    per_fault = jax.vmap(per_design, in_axes=(None, None, None, None, 0))
+    return per_fault(tables, gov, arrival, app_idx, fplans)
+
+
+# ``fplans`` never donates (reused across chunks), so the faulted DTPM grid
+# keeps the same two lane-donation variants as the fault-free one.
+_chunk_dtpm_design_faults = functools.partial(
+    jax.jit, static_argnames=("policy", "num_jobs", "scan_steps"),
+    donate_argnames=("tables",))(_dtpm_grid_faults)
+_chunk_dtpm_policy_faults = functools.partial(
+    jax.jit, static_argnames=("policy", "num_jobs", "scan_steps"),
+    donate_argnames=("gov",))(_dtpm_grid_faults)
+
+
 # --------------------------------------------------------------------------
 # The streamer
 # --------------------------------------------------------------------------
@@ -187,52 +228,82 @@ def _concat_out(chunks: list, lanes: int, axis: int = 0) -> Dict:
 
 def run_static_grid(tables, node_of_pe, arrival, app_idx, *, policy: str,
                     num_jobs: int, bins: int, repeats: int,
-                    chunk: Optional[int] = None,
-                    mesh=None) -> Tuple[Dict, np.ndarray]:
+                    chunk: Optional[int] = None, mesh=None,
+                    fplans=None,
+                    scan_steps: Optional[int] = None
+                    ) -> Tuple[Dict, np.ndarray]:
     """The sharded/chunked twin of ``sweep._sweep_grid``: (D, S) lanes with
     the design axis streamed/sharded; returns host-resident outputs with
-    exactly D lanes (bit-for-bit equal to the unsharded grid)."""
+    exactly D lanes (bit-for-bit equal to the unsharded grid).
+
+    ``fplans``/``scan_steps`` switch to the fail-stop grid: outputs gain a
+    leading (F,) fault-lane axis, and the design axis (still the streamed
+    one) moves to position 1 — the fault axis is outermost precisely so
+    streaming stays a design-axis slice (DESIGN.md §14)."""
     lanes = int(np.asarray(tables.exec_us).shape[0])
     lane_tree = (host_tree(tables), host_tree(node_of_pe))
+    faulted = fplans is not None
+    fdev = jnp.asarray(fplans, jnp.float32) if faulted else None
 
     def launch(piece):
         tb, nodes = piece
-        out, temps = _chunk_static(tb, nodes, arrival, app_idx,
-                                   policy=policy, num_jobs=num_jobs,
-                                   bins=bins, repeats=repeats)
+        if faulted:
+            out, temps = _chunk_static_faults(
+                tb, nodes, fdev, arrival, app_idx, policy=policy,
+                num_jobs=num_jobs, bins=bins, repeats=repeats,
+                scan_steps=scan_steps)
+        else:
+            out, temps = _chunk_static(tb, nodes, arrival, app_idx,
+                                       policy=policy, num_jobs=num_jobs,
+                                       bins=bins, repeats=repeats)
         out = dict(out)
         out["_peak_temp_scan_c"] = temps
         return out
 
-    out = _concat_out(_stream(lane_tree, lanes, chunk, mesh, launch), lanes)
+    out = _concat_out(_stream(lane_tree, lanes, chunk, mesh, launch), lanes,
+                      axis=1 if faulted else 0)
     return out, out.pop("_peak_temp_scan_c")
 
 
 def run_dtpm_grid(tables, gov, arrival, app_idx, *, policy: str,
-                  num_jobs: int, chunk: Optional[int] = None,
-                  mesh=None) -> Dict:
+                  num_jobs: int, chunk: Optional[int] = None, mesh=None,
+                  fplans=None, scan_steps: Optional[int] = None) -> Dict:
     """The sharded/chunked twin of ``sweep._sweep_grid_dtpm``: (D, G, S)
     lanes, streaming/sharding whichever of the design (D) and policy (G)
     axes is wider — the GovernorPolicy leaves are as much a lane stack as
-    the SimTables leaves (DESIGN.md §10)."""
+    the SimTables leaves (DESIGN.md §10).  ``fplans``/``scan_steps`` switch
+    to the fail-stop grid: outputs gain a leading (F,) fault-lane axis and
+    the streamed axis shifts one position right (DESIGN.md §14)."""
     D = int(np.asarray(tables.exec_us).shape[0])
     G = int(np.asarray(gov.up_threshold).shape[0])
     tables_h, gov_h = host_tree(tables), host_tree(gov)
+    faulted = fplans is not None
+    fdev = jnp.asarray(fplans, jnp.float32) if faulted else None
     if D >= G:                               # stream designs, reuse policies
         gov_dev = jax.tree_util.tree_map(jnp.asarray, gov_h)
 
         def launch(tb):
+            if faulted:
+                return _chunk_dtpm_design_faults(
+                    tb, gov_dev, fdev, arrival, app_idx, policy=policy,
+                    num_jobs=num_jobs, scan_steps=scan_steps)
             return _chunk_dtpm_design(tb, gov_dev, arrival, app_idx,
                                       policy=policy, num_jobs=num_jobs)
 
-        return _concat_out(_stream(tables_h, D, chunk, mesh, launch), D)
+        return _concat_out(_stream(tables_h, D, chunk, mesh, launch), D,
+                           axis=1 if faulted else 0)
     tables_dev = jax.tree_util.tree_map(jnp.asarray, tables_h)
 
     def launch(g):
+        if faulted:
+            return _chunk_dtpm_policy_faults(
+                tables_dev, g, fdev, arrival, app_idx, policy=policy,
+                num_jobs=num_jobs, scan_steps=scan_steps)
         return _chunk_dtpm_policy(tables_dev, g, arrival, app_idx,
                                   policy=policy, num_jobs=num_jobs)
 
-    return _concat_out(_stream(gov_h, G, chunk, mesh, launch), G, axis=1)
+    return _concat_out(_stream(gov_h, G, chunk, mesh, launch), G,
+                       axis=2 if faulted else 1)
 
 
 def resolve_mesh(shard: Optional[bool], devices=None):

@@ -16,6 +16,11 @@ factorise into four kinds (see DESIGN.md §9–10):
   RC loop;
 * **trace-affecting** (``trace``, ``trace.<field>``, aliases ``rate`` /
   ``seed`` / ``jobs``): each combination becomes a stacked workload row;
+* **faults** (``failures``, alias ``faults``): each value is one fail-stop
+  fault set, stacked into ``(F, P)`` fail-time plans and vmapped (outermost,
+  so the design axis stays streamable) through the fail-stop kernel — the
+  axis adds ZERO compiles per policy shape, and all-no-op axes reuse the
+  fault-free program outright (DESIGN.md §14);
 * **static** (``scheduler``): a compile-time branch of the kernel — swept in
   an outer python loop, one compiled program per value.
 
@@ -40,14 +45,16 @@ import numpy as np
 from ..core.dvfs import stack_policies
 from ..core.jobgen import JobTrace
 from ..core.simkernel_jax import _simulate_dtpm
-from ..dse.batch import (_simulate_grid, pad_node_map, stack_tables,
-                         stack_traces)
+from ..dse.batch import (_simulate_grid, _simulate_grid_faults, pad_node_map,
+                         stack_tables, stack_traces)
 from ..dse.space import DesignPoint
 from ..dse.thermal_jax import peak_temperature_grid
 from ..obs import metrics as _metrics
 from ..obs import telemetry as _obs_tel
+from . import faults as _faults
 from . import shardexec
 from .config import Scenario, TraceSpec
+from .errors import BackendCapabilityError, LaneAxisError, ScenarioError
 from .result import SweepResult
 from .run import run, tables_for
 
@@ -55,6 +62,7 @@ AXIS_ALIASES = {
     "rate": "trace.rate_jobs_per_ms",
     "seed": "trace.seed",
     "jobs": "trace.num_jobs",
+    "faults": "failures",
 }
 
 _DESIGN_FIELDS = {f.name for f in dataclasses.fields(DesignPoint)}
@@ -76,6 +84,8 @@ def _axis_kind(name: str) -> str:
     name = _canon(name)
     if name == "scheduler":
         return "static"
+    if name == "failures":
+        return "faults"
     if name in ("governor", "governor_params"):
         return "policy"
     if name == "design":
@@ -83,19 +93,19 @@ def _axis_kind(name: str) -> str:
     if name.startswith("design."):
         field = name.split(".", 1)[1]
         if field not in _DESIGN_FIELDS:
-            raise ValueError(f"unknown design axis field {field!r}")
+            raise LaneAxisError(f"unknown design axis field {field!r}")
         return "design"
     if name == "trace":
         return "trace"
     if name.startswith("trace."):
         field = name.split(".", 1)[1]
         if field not in _TRACE_FIELDS:
-            raise ValueError(f"unknown trace axis field {field!r}")
+            raise LaneAxisError(f"unknown trace axis field {field!r}")
         return "trace"
-    raise ValueError(
+    raise LaneAxisError(
         f"unknown sweep axis {name!r}; use 'design', 'design.<field>', "
         f"'governor', 'governor_params', 'scheduler', 'trace', "
-        f"'trace.<field>' or aliases {sorted(AXIS_ALIASES)}")
+        f"'trace.<field>', 'failures' or aliases {sorted(AXIS_ALIASES)}")
 
 
 def _apply_axes(scn: Scenario, names: Sequence[str],
@@ -142,6 +152,41 @@ def _sweep_grid_dtpm(tables, gov, arrival, app_idx, policy, num_jobs):
     per_policy = jax.vmap(per_trace, in_axes=(None, 0, None, None))
     per_design = jax.vmap(per_policy, in_axes=(0, None, None, None))
     return per_design(tables, gov, arrival, app_idx)
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "num_jobs", "bins",
+                                             "repeats", "scan_steps"))
+def _sweep_grid_faults(tables, node_of_pe, fplans, arrival, app_idx, policy,
+                       num_jobs, bins, repeats, scan_steps):
+    """Fail-stop lanes (F fault plans, D designs, S traces), ONE program.
+
+    The fault axis is outermost so the design axis stays streamable by the
+    chunked/sharded executor; the thermal scan vmaps per fault lane over the
+    same (D, S) grid program the fault-free path uses (DESIGN.md §14)."""
+    compile_count.inc()  # lint: waive JX003 -- deliberate: counts compiles, python body runs per trace
+    out = _simulate_grid_faults(tables, policy, num_jobs, arrival, app_idx,
+                                fplans, scan_steps)
+    temps = jax.vmap(lambda o: peak_temperature_grid(
+        o, node_of_pe, tables.power_active, tables.power_idle, bins=bins,
+        repeats=repeats))(out)
+    return out, temps
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("policy", "num_jobs", "scan_steps"))
+def _sweep_grid_dtpm_faults(tables, gov, fplans, arrival, app_idx, policy,
+                            num_jobs, scan_steps):
+    """Fail-stop DTPM lanes: (F fault plans, D designs, G policies,
+    S traces) through the closed-loop kernel in ONE program."""
+    compile_count.inc()  # lint: waive JX003 -- deliberate: counts compiles, python body runs per trace
+    per_trace = jax.vmap(
+        lambda tb, g, a, i, fp: _simulate_dtpm(tb, policy, num_jobs, a, i, g,
+                                               fp, scan_steps=scan_steps),
+        in_axes=(None, None, 0, 0, None))
+    per_policy = jax.vmap(per_trace, in_axes=(None, 0, None, None, None))
+    per_design = jax.vmap(per_policy, in_axes=(0, None, None, None, None))
+    per_fault = jax.vmap(per_design, in_axes=(None, None, None, None, 0))
+    return per_fault(tables, gov, arrival, app_idx, fplans)
 
 
 def _design_lanes(base: Scenario, design_axes: List[str],
@@ -226,15 +271,24 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
     want_tel = scenario.telemetry if telemetry is None else bool(telemetry)
     if backend == "ref":
         if chunk is not None or shard:
-            raise ValueError("chunk/shard are jax-backend lane options; the "
-                             "ref backend runs lane by lane already")
+            raise BackendCapabilityError(
+                "jax-backend lane options (chunk/shard)", "ref",
+                "backend='jax'",
+                detail="the ref backend runs lane by lane already")
         return _sweep_ref(scenario, names, values, want_tel)
     if backend != "jax":
-        raise ValueError(f"unknown backend {backend!r}")
-    if scenario.failures:
-        raise ValueError("fail-stop injection is reference-kernel only")
+        raise ScenarioError(f"unknown backend {backend!r}; have "
+                            f"('ref', 'jax')")
     mesh = shardexec.resolve_mesh(shard)
     lane_exec = chunk is not None or mesh is not None
+
+    # fault lanes: every value of a 'faults'/'failures' axis is one fault
+    # set; with no such axis the base scenario's failures apply to all lanes
+    fault_axes = [n for n in names if kinds[n] == "faults"]
+    fault_sets = ([_faults.normalize_failures(v)
+                   for v in values[fault_axes[0]]] if fault_axes
+                  else [scenario.failures])
+    have_faults = any(not f.is_noop for fs in fault_sets for f in fs)
 
     # classify the governor lanes by policy shape: static governors bake
     # into the tables (design-kind lanes), the dynamic ondemand family
@@ -245,7 +299,7 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
     policies = [s.make_policy() for s in pol_scns]
     dyn_flags = {p.dynamic for p in policies}
     if len(dyn_flags) > 1:
-        raise ValueError(
+        raise LaneAxisError(
             "a sweep cannot mix static and dynamic (ondemand-family) "
             "governors in one batch — they compile to different policy "
             "shapes; split the sweep per governor kind (DESIGN.md §10)")
@@ -253,6 +307,12 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
     if not dynamic:
         design_axes = design_axes + policy_axes   # baked into table lanes
         policy_axes = []
+    if have_faults and dynamic and want_tel:
+        raise BackendCapabilityError(
+            "telemetry with faults under a dynamic governor", "jax",
+            "backend='ref' (it records sampling windows in-loop)",
+            detail="fail-stop rollback breaks the window-closure invariant "
+                   "the post-hoc replay assumes")
 
     static_combos = list(itertools.product(
         *(values[n] for n in static_axes))) or [()]
@@ -267,7 +327,7 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
               for s, c in zip(t_scns, trace_combos)]
     job_counts = {t.num_jobs for t in traces}
     if len(job_counts) > 1:
-        raise ValueError(
+        raise LaneAxisError(
             f"the jax backend needs equal job counts per lane to stack one "
             f"(S, J) workload tensor, got {sorted(job_counts)}; sweep the "
             f"'jobs' axis with backend='ref' instead")
@@ -312,15 +372,35 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
     # tables depend on the static (scheduler) axis only through the offline
     # ILP table — hoist the (D, …) stack out of the loop unless a swept
     # combo actually selects the "table" policy
-    rebuild_per_combo = design_batch is None and any(
+    any_table = any(
         _apply_axes(lane_base, static_axes, sc).scheduler == "table"
         for sc in static_combos)
+    if have_faults and any_table:
+        raise BackendCapabilityError(
+            "fail-stop injection with the 'table' scheduler", "jax",
+            "backend='ref'",
+            detail="the offline ILP table pins tasks to PEs, so dead-PE "
+                   "fallback needs the runtime schedulers (met/etf)")
+    rebuild_per_combo = design_batch is None and any_table
     if design_batch is None and not rebuild_per_combo:
         tables, node_of_pe = _design_lanes(lane_base, design_axes,
                                            design_combos, pad_pes,
                                            host=lane_exec)
 
     gov_stack = stack_policies(policies) if dynamic else None
+
+    # stacked (F, P) fault plans: pe_ids validate against the narrowest
+    # design lane; plans are emitted at the padded PE width.  All-noop lanes
+    # leave plans=None — the sweep then runs the exact fault-free program
+    # (zero extra compiles) and tiles its results over the fault axis.
+    plans, scan_steps = None, None
+    if have_faults:
+        min_pes = min(_apply_axes(lane_base, design_axes, c).design.num_pes
+                      for c in design_combos)
+        plans, max_f = _faults.stack_fault_plans(
+            fault_sets, min_pes, width=int(tables.num_pes))
+        scan_steps = _faults.fault_scan_steps(num_jobs, int(tables.t_max),
+                                              max_f)
 
     per_static = []
     for sc in static_combos:
@@ -330,7 +410,20 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
                                                design_combos, pad_pes,
                                                host=lane_exec)
         if dynamic:
-            if lane_exec:
+            if plans is not None:
+                if lane_exec:
+                    out = shardexec.run_dtpm_grid(
+                        tables, gov_stack, arrival, app_idx,
+                        policy=s_scn.scheduler, num_jobs=num_jobs,
+                        chunk=chunk, mesh=mesh, fplans=plans,
+                        scan_steps=scan_steps)
+                else:
+                    out = _sweep_grid_dtpm_faults(tables, gov_stack, plans,
+                                                  arrival, app_idx,
+                                                  policy=s_scn.scheduler,
+                                                  num_jobs=num_jobs,
+                                                  scan_steps=scan_steps)
+            elif lane_exec:
                 out = shardexec.run_dtpm_grid(tables, gov_stack, arrival,
                                               app_idx,
                                               policy=s_scn.scheduler,
@@ -342,7 +435,23 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
                                        num_jobs=num_jobs)
             temps = out["peak_temp_c"]
         else:
-            if lane_exec:
+            if plans is not None:
+                if lane_exec:
+                    out, temps = shardexec.run_static_grid(
+                        tables, node_of_pe, arrival, app_idx,
+                        policy=s_scn.scheduler, num_jobs=num_jobs,
+                        bins=s_scn.thermal.bins,
+                        repeats=s_scn.thermal.repeats,
+                        chunk=chunk, mesh=mesh, fplans=plans,
+                        scan_steps=scan_steps)
+                else:
+                    out, temps = _sweep_grid_faults(
+                        tables, node_of_pe, plans, arrival, app_idx,
+                        policy=s_scn.scheduler, num_jobs=num_jobs,
+                        bins=s_scn.thermal.bins,
+                        repeats=s_scn.thermal.repeats,
+                        scan_steps=scan_steps)
+            elif lane_exec:
                 out, temps = shardexec.run_static_grid(
                     tables, node_of_pe, arrival, app_idx,
                     policy=s_scn.scheduler, num_jobs=num_jobs,
@@ -354,31 +463,49 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
                                          num_jobs=num_jobs,
                                          bins=s_scn.thermal.bins,
                                          repeats=s_scn.thermal.repeats)
-        per_static.append(dict(
+        if plans is not None and not fault_axes:
+            # base-scenario faults, no fault axis: drop the F=1 lane axis so
+            # the grid keeps its fault-free shape
+            out = {k: v[0] for k, v in out.items()}
+            temps = temps[0]
+        entry = dict(
             avg_latency_us=np.asarray(out["avg_job_latency_us"], np.float64),
             makespan_us=np.asarray(out["makespan_us"], np.float64),
             energy_j=np.asarray(out["energy_j"], np.float64),
             peak_temp_c=np.asarray(temps, np.float64),
-            busy_per_pe_us=np.asarray(out["busy_per_pe_us"], np.float64)))
+            busy_per_pe_us=np.asarray(out["busy_per_pe_us"], np.float64))
         if want_tel:
-            per_static[-1]["telemetry"] = _telemetry_grid(
+            entry["telemetry"] = _telemetry_grid(
                 s_scn, design_axes, design_combos, policies, tables,
-                app_idx, out, dynamic)
+                app_idx, out, dynamic,
+                num_faults=(len(fault_sets)
+                            if fault_axes and plans is not None else 0))
+        if fault_axes and plans is None:
+            # every fault lane is a no-op: the fault-free program ran once
+            # (the §14 no-op contract — zero extra compiles) and its results
+            # tile verbatim across the fault axis
+            entry = {k: np.repeat(v[None], len(fault_sets), axis=0)
+                     for k, v in entry.items()}
+        per_static.append(entry)
 
-    # assemble: (static..., design..., policy..., trace..., extra) then the
-    # user's axes-dict order
+    # assemble: (static..., faults..., design..., policy..., trace..., extra)
+    # then the user's axes-dict order
     d_lens = [len(values[n]) for n in design_axes]
     p_lens = [len(values[n]) for n in policy_axes]
     t_lens = [len(values[n]) for n in trace_axes]
     s_lens = [len(values[n]) for n in static_axes]
-    internal = static_axes + design_axes + policy_axes + trace_axes
+    f_lens = [len(values[n]) for n in fault_axes]
+    internal = static_axes + fault_axes + design_axes + policy_axes \
+        + trace_axes
     perm = [internal.index(n) for n in names]
-    grid_ndim = 4 if dynamic else 3        # (Σstatic, D[, G], S)
+    # (Σstatic[, F], D[, G], S)
+    grid_ndim = (4 if dynamic else 3) + (1 if fault_axes else 0)
 
     def _assemble(key: str) -> np.ndarray:
         stacked = np.stack([g[key] for g in per_static])
         extra = stacked.shape[grid_ndim:]
-        arr = stacked.reshape(*s_lens, *d_lens, *p_lens, *t_lens, *extra)
+        arr = stacked.reshape(*s_lens, *f_lens, *d_lens, *p_lens, *t_lens,
+                              *extra)
         k = len(internal)
         return np.transpose(arr, axes=perm + list(range(k, arr.ndim)))
 
@@ -395,12 +522,22 @@ def sweep(scenario: Scenario, axes: Dict[str, Sequence],
 
 def _telemetry_grid(s_scn: Scenario, design_axes: List[str],
                     design_combos: List[Tuple], policies, tables,
-                    app_idx, out, dynamic: bool) -> np.ndarray:
+                    app_idx, out, dynamic: bool,
+                    num_faults: int = 0) -> np.ndarray:
     """Per-lane :class:`Telemetry` objects for one static combo, as an
     object array shaped like the internal grid ((D, G, S) dynamic,
     (D, S) static).  Each lane slices the stacked tables (leaf-wise) and the
     grid outputs, then replays the kernel's jitted telemetry scan — the
-    simulation itself is not re-run."""
+    simulation itself is not re-run.  ``num_faults > 0`` (static governors
+    only — faulted dynamic telemetry is rejected upstream) prepends the
+    fault-lane axis: the replay runs per fault lane on that lane's final
+    schedule, so dead PEs show zero utilisation past their fail time."""
+    if num_faults:
+        return np.stack([
+            _telemetry_grid(s_scn, design_axes, design_combos, policies,
+                            tables, app_idx,
+                            {k: v[f] for k, v in out.items()}, dynamic)
+            for f in range(num_faults)])
     keys = ("scheduled", "start", "finish", "onpe", "makespan_us")
     D = len(design_combos)
     S = int(np.asarray(app_idx).shape[0])

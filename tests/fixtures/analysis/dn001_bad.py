@@ -42,3 +42,11 @@ _chunk = functools.partial(jax.jit, donate_argnames=("tables",))(_grid)
 def launch(tables, gov):
     r = _chunk(tables, gov)
     return r + tables                        # line 44: DN001 read after donate
+
+
+def after_branch(buf, scale, fancy):
+    if fancy:
+        out = consume(buf, scale)
+    else:
+        out = buf * scale
+    return out + buf.sum()                   # line 52: DN001 read after the if

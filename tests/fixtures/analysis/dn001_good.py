@@ -31,3 +31,25 @@ def untouched(buf, scale):
 
 def kept(buf, scale):
     return consume(buf, scale=scale)         # scale is not donated
+
+
+def multiline(buf, very_long_scale_name):
+    out = consume(
+        buf,                                 # the donating call's own args
+        very_long_scale_name)                # span lines: not a use-after
+    return out
+
+
+def exclusive(buf, scale, fancy):
+    if fancy:
+        out = consume(
+            buf, scale)                      # donates in the if-branch...
+    else:
+        out = buf * scale                    # ...so the else never follows it
+    return out
+
+
+def early_return(buf, scale, fancy):
+    if fancy:
+        return consume(buf, scale)           # returns: nothing follows it
+    return buf * scale

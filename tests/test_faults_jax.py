@@ -1,0 +1,314 @@
+"""Fail-stop fault injection in the JAX kernel (DESIGN.md §14).
+
+Covers the tentpole contract of the fault lanes:
+
+* ref ↔ jax bit-for-bit equality on comm-free traces with fail-stop faults
+  (single, multi, simultaneous, accelerator wipeout, DTPM closed loop);
+* graceful degradation: accelerator-class tasks fall back to CPU PEs when
+  every accelerator dies — the run completes, slower;
+* the ``faults`` sweep lane axis equals per-scenario ``run()`` and adds
+  ZERO compiles per policy shape (``sweep.compile_count``);
+* no-op fault specs (empty / all-``inf``) take the fault-free fast path in
+  both ``run`` and ``sweep``;
+* telemetry reports zero utilisation on dead PEs past their fail time;
+* the :class:`FaultSpec` pytree spec, its bare-tuple deprecation shim, and
+  the typed ``ScenarioError`` hierarchy.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (deterministic_trace, get_scheduler, make_soc_table2,
+                        poisson_trace, wifi_tx)
+from repro.core.dvfs import OndemandGovernor
+from repro.core.resources import CommModel
+from repro.core.simkernel_jax import build_tables, simulate_jax, \
+    simulate_jax_dtpm
+from repro.core.simkernel_ref import simulate
+from repro.scenario import (BackendCapabilityError, FaultSpec, LaneAxisError,
+                            Scenario, ScenarioError, TraceSpec,
+                            pe_loss_faults, run, sweep)
+from repro.scenario.faults import (fault_plan, fault_scan_steps,
+                                   normalize_failures, ref_failures,
+                                   stack_fault_plans)
+from repro.scenario.sweep import compile_count
+
+SCN = Scenario(apps=("wifi_tx",),
+               trace=TraceSpec(rate_jobs_per_ms=25.0, num_jobs=24, seed=3))
+
+
+def _comm_free_db():
+    db = make_soc_table2()
+    db.comm = CommModel(startup_us=0.0, bw_bytes_per_us=1e30)
+    return db
+
+
+def _plan(db, failures):
+    return fault_plan(normalize_failures(failures), db.num_pes)
+
+
+def _assert_bitforbit(db, policy, failures, trace):
+    """Every ref record matches the jax grid bit for bit; no extra commits."""
+    app = wifi_tx()
+    ref = simulate(db, [app], trace, get_scheduler(policy),
+                   failures=ref_failures(normalize_failures(failures)))
+    tables = build_tables(db, [app])
+    jx = simulate_jax(tables, policy, trace.arrival_us, trace.app_index,
+                      faults=_plan(db, failures))
+    fin = np.asarray(jx["finish"])
+    start = np.asarray(jx["start"])
+    onpe = np.asarray(jx["onpe"])
+    for r in ref.records:
+        assert fin[r.job_id, r.task_id] == np.float32(r.finish_us)
+        assert start[r.job_id, r.task_id] == np.float32(r.start_us)
+        assert onpe[r.job_id, r.task_id] == r.pe_id
+    assert int(np.asarray(jx["scheduled"]).sum()) == len(ref.records)
+    assert float(jx["makespan_us"]) == np.float32(ref.makespan_us)
+    np.testing.assert_allclose(float(jx["energy_j"]),
+                               ref.energy.total_energy_j, rtol=1e-5)
+    return ref, jx
+
+
+# ------------------------------------------------- kernel-level bit-for-bit
+
+@pytest.mark.parametrize("policy", ["etf", "met"])
+def test_single_fault_bitforbit(policy):
+    db = _comm_free_db()
+    trace = deterministic_trace(25.0, 48, ["wifi_tx"])
+    _assert_bitforbit(db, policy, [FaultSpec(0, 500.0)], trace)
+
+
+def test_fault_at_t0_and_multi_fault_bitforbit():
+    db = _comm_free_db()
+    trace = deterministic_trace(25.0, 48, ["wifi_tx"])
+    _assert_bitforbit(db, "etf", [FaultSpec(1, 0.0)], trace)
+    _assert_bitforbit(db, "etf", [FaultSpec(0, 300.0), FaultSpec(1, 800.0)],
+                      trace)
+    # simultaneous faults apply as one union rollback
+    _assert_bitforbit(db, "etf", [FaultSpec(0, 400.0), FaultSpec(2, 400.0)],
+                      trace)
+
+
+def test_multi_fault_poisson_bitforbit():
+    db = _comm_free_db()
+    trace = poisson_trace(20.0, 64, ["wifi_tx"], seed=3)
+    _assert_bitforbit(db, "met", [FaultSpec(0, 300.0), FaultSpec(4, 700.0)],
+                      trace)
+
+
+def test_accelerator_wipeout_degrades_gracefully():
+    """All accelerators dead: their tasks fall back to CPU PEs; the run
+    completes (bit-for-bit equal to ref) with a strictly worse makespan."""
+    db = _comm_free_db()
+    accel = [j for j, pe in enumerate(db.pes) if not pe.is_cpu]
+    assert accel, "table2 SoC must have accelerator PEs"
+    trace = deterministic_trace(25.0, 48, ["wifi_tx"])
+    wipe = [FaultSpec(p, 600.0) for p in accel]
+    ref, jx = _assert_bitforbit(db, "etf", wipe, trace)
+    free = simulate(db, [wifi_tx()], trace, get_scheduler("etf"))
+    assert ref.makespan_us > free.makespan_us
+    onpe = np.asarray(jx["onpe"])[np.asarray(jx["scheduled"])]
+    fin = np.asarray(jx["finish"])[np.asarray(jx["scheduled"])]
+    # nothing finishes on a dead accelerator after its fail time
+    assert not np.any(np.isin(onpe, accel) & (fin > 600.0))
+
+
+def test_dtpm_faults_bitforbit():
+    db = _comm_free_db()
+    app = wifi_tx()
+    gov = OndemandGovernor()
+    trace = deterministic_trace(25.0, 32, ["wifi_tx"])
+    failures = [FaultSpec(0, 300.0), FaultSpec(4, 700.0)]
+    ref = simulate(db, [app], trace, get_scheduler("etf"), gov,
+                   failures=ref_failures(failures))
+    tables = build_tables(db, [app], governor=gov)
+    jx = simulate_jax_dtpm(tables, "etf", trace.arrival_us, trace.app_index,
+                           gov.policy(), faults=_plan(db, failures))
+    fin = np.asarray(jx["finish"])
+    for r in ref.records:
+        assert fin[r.job_id, r.task_id] == np.float32(r.finish_us)
+    assert float(jx["makespan_us"]) == np.float32(ref.makespan_us)
+    np.testing.assert_allclose(float(jx["energy_j"]),
+                               ref.energy.total_energy_j, rtol=1e-5)
+
+
+# ------------------------------------------------------------ facade: run()
+
+def test_run_faults_ref_jax_agree():
+    scn = SCN.replace(failures=(FaultSpec(0, 500.0),))
+    ref = run(scn, backend="ref")
+    jx = run(scn, backend="jax")
+    assert np.float32(ref.makespan_us) == np.float32(jx.makespan_us)
+    np.testing.assert_allclose(jx.energy_j, ref.energy_j, rtol=1e-3)
+
+
+def test_noop_faults_take_fault_free_fast_path():
+    """Empty / all-inf fault specs normalise to the exact fault-free call."""
+    free = run(SCN, backend="jax")
+    for failures in ((), (FaultSpec(0, float("inf")),)):
+        res = run(SCN.replace(failures=failures), backend="jax")
+        assert res.makespan_us == free.makespan_us
+        assert res.energy_j == free.energy_j
+    assert fault_plan((), 14) is None
+    assert fault_plan((FaultSpec(3, float("inf")),), 14) is None
+    plans, max_f = stack_fault_plans([(), (FaultSpec(0, np.inf),)], 14)
+    assert plans is None and max_f == 0
+
+
+# ----------------------------------------------------------- facade: sweep()
+
+FAULT_LANES = [
+    (),
+    (FaultSpec(0, 500.0),),
+    (FaultSpec(0, 300.0), FaultSpec(1, 800.0)),
+]
+RATES = [5.0, 20.0]
+
+
+def test_fault_lane_sweep_matches_per_scenario_run():
+    sr = sweep(SCN, axes={"faults": FAULT_LANES, "rate": RATES})
+    assert sr.makespan_us.shape == (len(FAULT_LANES), len(RATES))
+    for i, fs in enumerate(FAULT_LANES):
+        for j, rate in enumerate(RATES):
+            r = run(SCN.at_rate(rate).replace(failures=fs), backend="jax")
+            assert np.float32(sr.makespan_us[i, j]) == np.float32(r.makespan_us)
+            assert np.float32(sr.energy_j[i, j]) == np.float32(r.energy_j)
+
+
+def test_fault_lane_sweep_adds_zero_compiles():
+    axes = {"faults": FAULT_LANES, "rate": RATES}
+    sweep(SCN, axes=axes)                       # warm the faulted program
+    n0 = compile_count.value
+    sweep(SCN, axes=axes)                       # same policy shape: cached
+    assert compile_count.value == n0
+    # different fault *values* with the same lane count and per-lane fault
+    # budget are data, not shape: still ZERO compiles per policy shape
+    sweep(SCN, axes={"faults": [(FaultSpec(5, 50.0),),
+                                (FaultSpec(3, 2000.0),),
+                                (FaultSpec(1, 10.0), FaultSpec(2, 20.0))],
+                     "rate": RATES})
+    assert compile_count.value == n0
+
+
+def test_all_noop_fault_axis_reuses_fault_free_program():
+    sweep(SCN, axes={"rate": RATES})            # warm the fault-free program
+    n0 = compile_count.value
+    sr = sweep(SCN, axes={"faults": [(), (FaultSpec(0, float("inf")),)],
+                          "rate": RATES})
+    assert compile_count.value == n0            # ZERO extra compiles
+    assert sr.makespan_us.shape == (2, len(RATES))
+    np.testing.assert_array_equal(sr.makespan_us[0], sr.makespan_us[1])
+
+
+def test_fault_sweep_composes_with_chunk_and_design_axis():
+    d0 = SCN.design
+    d1 = dataclasses.replace(d0, num_little=d0.num_little + 2)
+    axes = {"design": [d0, d1], "faults": FAULT_LANES[:2], "rate": [10.0]}
+    base = sweep(SCN, axes=axes)
+    chunked = sweep(SCN, axes=axes, chunk=1)
+    np.testing.assert_array_equal(base.makespan_us, chunked.makespan_us)
+    np.testing.assert_array_equal(base.energy_j, chunked.energy_j)
+    r = run(SCN.at_rate(10.0).replace(design=d1,
+                                      failures=FAULT_LANES[1]),
+            backend="jax")
+    assert np.float32(base.makespan_us[1, 1, 0]) == np.float32(r.makespan_us)
+
+
+def test_fault_sweep_ref_backend_lane_by_lane():
+    jx = sweep(SCN, axes={"faults": FAULT_LANES, "rate": [25.0]})
+    ref = sweep(SCN, axes={"faults": FAULT_LANES, "rate": [25.0]},
+                backend="ref")
+    np.testing.assert_allclose(jx.energy_j, ref.energy_j, rtol=1e-3)
+
+
+# ------------------------------------------------------ telemetry satellite
+
+def test_telemetry_dead_cluster_zero_util_after_fail():
+    db = SCN.soc()
+    accel = tuple(j for j, pe in enumerate(db.pes) if not pe.is_cpu)
+    scn = SCN.replace(failures=tuple(FaultSpec(p, 500.0) for p in accel))
+    for backend in ("jax", "ref"):
+        tel = run(scn, backend=backend, telemetry=True).telemetry
+        t = np.asarray(tel.time_us)
+        util = np.asarray(tel.util)
+        dead = t > 500.0 + tel.window_us        # windows fully past the fault
+        assert dead.any()
+        np.testing.assert_array_equal(util[dead][:, -1], 0.0)
+        assert util[:, :-1].sum() > 0           # survivors still working
+
+
+# --------------------------------------------- FaultSpec API + typed errors
+
+def test_faultspec_is_frozen_static_pytree():
+    import jax
+    f = FaultSpec(pe_id=3, fail_time_us=125.5)
+    leaves, _ = jax.tree_util.tree_flatten(f)
+    assert leaves == []                          # all-metadata pytree
+    assert hash(f) == hash(FaultSpec(3, 125.5))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        f.pe_id = 4
+    # f32 quantisation keeps ref/jax comparisons aligned
+    g = FaultSpec(0, 1e-9)
+    assert g.fail_time_us == float(np.float32(1e-9))
+    assert FaultSpec(0, np.inf).is_noop and not f.is_noop
+
+
+def test_faultspec_validation():
+    with pytest.raises(ScenarioError, match="kind"):
+        FaultSpec(0, 1.0, kind="transient")
+    with pytest.raises(ScenarioError, match="pe_id"):
+        FaultSpec(-1, 1.0)
+    with pytest.raises(ScenarioError, match="NaN"):
+        FaultSpec(0, float("nan"))
+    with pytest.raises(ScenarioError, match="out of range"):
+        fault_plan((FaultSpec(14, 1.0),), 14)
+
+
+def test_bare_tuple_shim_warns_and_normalises():
+    with pytest.warns(DeprecationWarning, match="FaultSpec"):
+        scn = SCN.replace(failures=((0, 50.0), (1, 75.0)))
+    assert scn.failures == (FaultSpec(0, 50.0), FaultSpec(1, 75.0))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # FaultSpec form is silent
+        scn2 = SCN.replace(failures=(FaultSpec(0, 50.0),))
+    assert scn2.failures[0].kind == "fail_stop"
+    # the shimmed form still runs (one warning per normalisation call)
+    with pytest.warns(DeprecationWarning):
+        res = run(SCN.replace(failures=((0, 500.0),)), backend="jax")
+    assert res.makespan_us == run(
+        SCN.replace(failures=(FaultSpec(0, 500.0),)), backend="jax"
+    ).makespan_us
+
+
+def test_typed_error_hierarchy():
+    assert issubclass(ScenarioError, ValueError)
+    assert issubclass(BackendCapabilityError, ScenarioError)
+    assert issubclass(LaneAxisError, ScenarioError)
+    with pytest.raises(ScenarioError, match="unknown backend"):
+        run(SCN, backend="gem5")
+    with pytest.raises(ScenarioError, match="unknown backend"):
+        sweep(SCN, axes={"rate": [5.0]}, backend="gem5")
+    with pytest.raises(LaneAxisError, match="unknown sweep axis"):
+        sweep(SCN, axes={"voltage": [1.0]})
+    with pytest.raises(BackendCapabilityError, match="chunk/shard"):
+        sweep(SCN, axes={"rate": [5.0]}, backend="ref", chunk=2)
+    with pytest.raises(BackendCapabilityError, match="table"):
+        sweep(SCN, axes={"faults": FAULT_LANES[:2],
+                         "scheduler": ["etf", "table"]})
+    with pytest.raises(BackendCapabilityError, match="telemetry"):
+        sweep(SCN.replace(governor="ondemand"),
+              axes={"faults": FAULT_LANES[:2]}, telemetry=True)
+
+
+def test_pe_loss_faults_enumerates_subsets():
+    lanes = pe_loss_faults(range(4), fail_time_us=10.0, k=2)
+    assert len(lanes) == 6                      # C(4, 2)
+    assert all(len(fs) == 2 for fs in lanes)
+    assert all(f.fail_time_us == 10.0 for fs in lanes for f in fs)
+
+
+def test_fault_scan_steps_bound():
+    assert fault_scan_steps(10, 6, 0) == 60
+    assert fault_scan_steps(10, 6, 2) == 60 * 3 + 2

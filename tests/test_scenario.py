@@ -20,7 +20,8 @@ from repro.core.dvfs import OndemandGovernor, UserspaceGovernor
 from repro.core.resources import CPU_BIG, CPU_LITTLE, make_soc_table2
 from repro.core.schedulers import get_scheduler
 from repro.dse import DesignPoint, build_design_batch, stack_traces
-from repro.scenario import Result, Scenario, ThermalSpec, TraceSpec, run, sweep
+from repro.scenario import (FaultSpec, Result, Scenario, ThermalSpec,
+                            TraceSpec, run, sweep)
 from repro.scenario.sweep import compile_count
 
 SCN = Scenario(apps=("wifi_tx",),
@@ -106,17 +107,23 @@ def test_result_metrics_surface():
 
 
 def test_run_jax_rejects_ref_only_features():
-    with pytest.raises(ValueError, match="reference"):
-        run(SCN.replace(failures=((0, 100.0),)), backend="jax")
     with pytest.raises(ValueError, match="backend"):
         run(SCN, backend="gem5")
+    # fail-stop injection is no longer ref-only (DESIGN.md §14) — it only
+    # defers to ref for the pinned offline-table scheduler
+    res = run(SCN.replace(failures=(FaultSpec(0, 100.0),)), backend="jax")
+    assert res.makespan_us > 0
+    with pytest.raises(ValueError, match="table"):
+        run(SCN.replace(scheduler="table",
+                        failures=(FaultSpec(0, 100.0),)), backend="jax")
     # ondemand is no longer ref-only: the DTPM kernel runs it (DESIGN.md §7)
     res = run(SCN.replace(governor="ondemand"), backend="jax")
     assert res.makespan_us > 0 and res.peak_temp_c >= 25.0 - 1e-6
 
 
 def test_run_ref_supports_failures_and_ondemand():
-    res = run(SCN.replace(failures=((0, 50.0),), governor="ondemand"),
+    res = run(SCN.replace(failures=(FaultSpec(0, 50.0),),
+                          governor="ondemand"),
               backend="ref")
     assert res.makespan_us > 0
     assert not any(r.pe_id == 0 and r.finish_us > 50.0
